@@ -1,0 +1,80 @@
+"""Shared benchmark fixtures: cached corpora, indexes, timing helpers.
+
+Scale note (DESIGN.md §6): the paper's datasets (GIST1M, DB-OpenAI, …) are
+not available offline, so the harness runs deterministic synthetic corpora
+at CPU scale; every bench is parameterized by n so the identical harness
+reproduces paper scale on a pod.  Shapes of QPS-recall curves and relative
+orderings are the reproduction target, not absolute C++ QPS.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Semantics, UGConfig, UGIndex, recall
+from repro.core.baselines import HiPNGLite, PostFilterIndex
+from repro.data import CorpusConfig, make_corpus, make_queries
+
+N_DEFAULT = 4000
+DIM = 24
+NQ = 64
+
+UG_CFG = UGConfig(
+    ef_spatial=32, ef_attribute=64, max_edges_if=32, max_edges_is=32,
+    iterations=3, repair_width=16, exact_spatial=True, block=1024,
+)
+
+
+@functools.lru_cache(maxsize=8)
+def corpus(n: int = N_DEFAULT, dim: int = DIM, seed: int = 0):
+    return make_corpus(CorpusConfig(n=n, dim=dim, seed=seed))
+
+
+@functools.lru_cache(maxsize=8)
+def queries(workload: str = "uniform", n: int = N_DEFAULT, dim: int = DIM, nq: int = NQ):
+    return make_queries(CorpusConfig(n=n, dim=dim), nq, workload=workload)
+
+
+@functools.lru_cache(maxsize=8)
+def ug_index(n: int = N_DEFAULT, dim: int = DIM, cfg: UGConfig = UG_CFG) -> UGIndex:
+    x, ints = corpus(n, dim)
+    return UGIndex.build(x, ints, cfg)
+
+
+@functools.lru_cache(maxsize=4)
+def postfilter_index(n: int = N_DEFAULT, dim: int = DIM) -> PostFilterIndex:
+    x, ints = corpus(n, dim)
+    return PostFilterIndex.build(x, ints, UG_CFG)
+
+
+@functools.lru_cache(maxsize=4)
+def hipng_index(n: int = N_DEFAULT, dim: int = DIM) -> HiPNGLite:
+    x, ints = corpus(n, dim)
+    return HiPNGLite.build(x, ints, depth=2, config=UG_CFG)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """(seconds_per_call, result) with jit warmup."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.perf_counter() - t0) / iters, out
+
+
+def qps_recall(index, qv, qi, *, sem=Semantics.IF, ef=64, k=10):
+    """(qps, recall@k) for one index/ef point."""
+    dt, res = timed(lambda: index.search(qv, qi, sem=sem, ef=ef, k=k))
+    gt = index.ground_truth(qv, qi, sem=sem, k=k)
+    return qv.shape[0] / dt, recall(res, gt)
+
+
+def row(name: str, us_per_call: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": us_per_call, "derived": derived}

@@ -1,0 +1,53 @@
+"""Benchmark driver: one function per paper table (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks corpora for
+smoke runs; ``--only <prefix>`` filters benches.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import tables
+
+    n = 2000 if args.quick else None
+    benches = [
+        ("ifann", lambda: tables.bench_ifann(**({"n": n} if n else {}))),
+        ("query_types", lambda: tables.bench_query_types(**({"n": n} if n else {}))),
+        ("workloads", lambda: tables.bench_workloads(**({"n": n} if n else {}))),
+        ("indexing", lambda: tables.bench_indexing(**({"n": n} if n else {}))),
+        ("vary_k", lambda: tables.bench_k(**({"n": n} if n else {}))),
+        ("sensitivity", lambda: tables.bench_sensitivity(n=1200 if args.quick else 2000)),
+        ("scalability", lambda: tables.bench_scalability(
+            sizes=(500, 1000, 2000) if args.quick else (1000, 2000, 4000, 8000))),
+        ("kernels", tables.bench_kernels),
+        ("lm_steps", tables.bench_lm_steps),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.time()
+        try:
+            for r in fn():
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+            print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

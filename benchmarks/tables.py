@@ -1,0 +1,207 @@
+"""One benchmark function per paper table/figure (DESIGN.md §7 index).
+
+Each returns CSV-able rows: name, us_per_call, derived.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import Semantics, UGConfig, UGIndex, recall
+from repro.core.search import brute_force
+from repro.data import CorpusConfig, make_corpus, make_queries
+
+
+# ---------------------------------------------------------------- Exp-1 / Fig 6
+def bench_ifann(n=common.N_DEFAULT):
+    """IFANN QPS–recall trade-off: UG vs post-filter vs Hi-PNG vs pre-filter."""
+    rows = []
+    qv, qi = common.queries("uniform", n=n)
+    ug = common.ug_index(n)
+    pf = common.postfilter_index(n)
+    hp = common.hipng_index(n)
+    gt = ug.ground_truth(qv, qi, sem=Semantics.IF, k=10)
+
+    for ef in (16, 32, 64, 128):
+        qps, r = common.qps_recall(ug, qv, qi, sem=Semantics.IF, ef=ef)
+        rows.append(common.row(f"ifann_ug_ef{ef}", 1e6 / qps, f"recall={r:.3f} qps={qps:.0f}"))
+    for ef in (32, 128):
+        dt, res = common.timed(
+            lambda: pf.search(qv, qi, sem=Semantics.IF, ef=ef, k=10, oversample=8)
+        )
+        r = recall(res, gt)
+        rows.append(common.row(f"ifann_postfilter_ef{ef}", 1e6 * dt / qv.shape[0],
+                               f"recall={r:.3f} qps={qv.shape[0]/dt:.0f}"))
+    dt, res = common.timed(lambda: hp.search(qv, qi, ef=64, k=10))
+    rows.append(common.row("ifann_hipng_ef64", 1e6 * dt / qv.shape[0],
+                           f"recall={recall(res, gt):.3f} qps={qv.shape[0]/dt:.0f}"))
+    x, ints = common.corpus(n)
+    dt, res = common.timed(
+        lambda: brute_force(x, ints, qv, qi, sem=Semantics.IF, k=10)
+    )
+    rows.append(common.row("ifann_prefilter_exact", 1e6 * dt / qv.shape[0],
+                           f"recall=1.000 qps={qv.shape[0]/dt:.0f}"))
+    return rows
+
+
+# ---------------------------------------------------------------- Exp-2 / Fig 7
+def bench_query_types(n=common.N_DEFAULT):
+    """One UG index answering all four semantics (the paper's headline)."""
+    rows = []
+    ug = common.ug_index(n)
+    qv, qi = common.queries("uniform", n=n)
+    _, qpoint = common.queries("point", n=n)
+    for sem, q in [
+        (Semantics.IF, qi), (Semantics.IS, qi),
+        (Semantics.RS, qpoint), (Semantics.RF, qi),
+    ]:
+        qps, r = common.qps_recall(ug, qv, q, sem=sem, ef=96)
+        rows.append(common.row(f"qtype_{sem.value.lower()}", 1e6 / qps,
+                               f"recall={r:.3f} qps={qps:.0f}"))
+    return rows
+
+
+# ---------------------------------------------------------------- Exp-3 / Fig 10
+def bench_workloads(n=common.N_DEFAULT):
+    """IFANN under short/long/mixed/uniform selectivity workloads."""
+    rows = []
+    ug = common.ug_index(n)
+    for w in ("short", "long", "mixed", "uniform"):
+        qv, qi = common.queries(w, n=n)
+        qps, r = common.qps_recall(ug, qv, qi, sem=Semantics.IF, ef=96)
+        rows.append(common.row(f"workload_{w}", 1e6 / qps,
+                               f"recall={r:.3f} qps={qps:.0f}"))
+    return rows
+
+
+# ---------------------------------------------------------------- Exp-4 / Fig 8+9
+def bench_indexing(n=common.N_DEFAULT):
+    """Index construction time and memory for UG vs baselines."""
+    rows = []
+    ug = common.ug_index(n)
+    rows.append(common.row("index_build_ug", ug.build_seconds * 1e6,
+                           f"seconds={ug.build_seconds:.1f} bytes={ug.memory_bytes():,}"))
+    pf = common.postfilter_index(n)
+    rows.append(common.row("index_build_postfilter", pf.build_seconds * 1e6,
+                           f"seconds={pf.build_seconds:.1f}"))
+    hp = common.hipng_index(n)
+    rows.append(common.row("index_build_hipng", hp.build_seconds * 1e6,
+                           f"seconds={hp.build_seconds:.1f} partitions={len(hp.partitions)}"))
+    d = ug.degree_stats()
+    rows.append(common.row("index_degrees_ug", 0.0,
+                           f"mean_if={d['mean_if']:.1f} mean_is={d['mean_is']:.1f} edges={d['edges']}"))
+    return rows
+
+
+# ---------------------------------------------------------------- Exp-5 / Fig 12
+def bench_k(n=common.N_DEFAULT):
+    rows = []
+    ug = common.ug_index(n)
+    qv, qi = common.queries("uniform", n=n)
+    for k in (1, 10, 20, 50):
+        qps, r = common.qps_recall(ug, qv, qi, sem=Semantics.IF, ef=max(96, 2 * k), k=k)
+        rows.append(common.row(f"vary_k_{k}", 1e6 / qps,
+                               f"recall={r:.3f} qps={qps:.0f}"))
+    return rows
+
+
+# ---------------------------------------------------------------- Exp-6 / Fig 11
+def bench_sensitivity(n=2000):
+    """Build-parameter sensitivity (smaller n: builds many indexes)."""
+    rows = []
+    x, ints = common.corpus(n)
+    qv, qi = common.queries("uniform", n=n)
+
+    def build_and_eval(tag, **kw):
+        cfg_kw = dict(ef_spatial=24, ef_attribute=48, max_edges_if=24,
+                      max_edges_is=24, iterations=2, repair_width=8,
+                      exact_spatial=True, block=1024)
+        cfg_kw.update(kw)
+        idx = UGIndex.build(x, ints, UGConfig(**cfg_kw))
+        qps, r = common.qps_recall(idx, qv, qi, sem=Semantics.IF, ef=64)
+        rows.append(common.row(f"sens_{tag}", idx.build_seconds * 1e6,
+                               f"recall={r:.3f} qps={qps:.0f} build_s={idx.build_seconds:.1f}"))
+
+    for efa in (16, 48, 96):
+        build_and_eval(f"ef_attr_{efa}", ef_attribute=efa)
+    for efs in (8, 24, 48):
+        build_and_eval(f"ef_spatial_{efs}", ef_spatial=efs)
+    for it in (1, 2, 4):
+        build_and_eval(f"iters_{it}", iterations=it)
+    for me in (8, 24, 48):
+        build_and_eval(f"max_edges_{me}", max_edges_if=me, max_edges_is=me)
+    return rows
+
+
+# ---------------------------------------------------------------- Exp-7 / Fig 13
+def bench_scalability(sizes=(1000, 2000, 4000, 8000)):
+    rows = []
+    for n in sizes:
+        idx = common.ug_index(n)
+        qv, qi = common.queries("uniform", n=n)
+        qps, r = common.qps_recall(idx, qv, qi, sem=Semantics.IF, ef=64)
+        rows.append(common.row(f"scale_n{n}", 1e6 / qps,
+                               f"recall={r:.3f} qps={qps:.0f} build_s={idx.build_seconds:.1f}"))
+    return rows
+
+
+# ---------------------------------------------------------------- kernels
+def bench_kernels():
+    """Pallas kernels (interpret mode on CPU — relative numbers only) vs jnp."""
+    from repro.kernels import ops, ref
+
+    rows = []
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(0), 4)
+    q = jax.random.normal(k1, (64, 128))
+    x = jax.random.normal(k2, (4096, 128))
+    oi = jnp.sort(jax.random.uniform(k3, (4096, 2)), axis=1)
+    c = jax.random.uniform(k4, (64, 1))
+    qi = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
+
+    dt, _ = common.timed(lambda: ref.pairwise_sq_dist(q, x))
+    rows.append(common.row("kernel_l2dist_jnp_ref", dt * 1e6, "oracle"))
+    dt, _ = common.timed(lambda: ops.pairwise_sq_dist(q, x))
+    rows.append(common.row("kernel_l2dist_pallas_interp", dt * 1e6,
+                           "interpret-mode (TPU target)"))
+    dt, _ = common.timed(lambda: ref.filtered_topk(q, x, oi, qi, is_filter=True, k=10))
+    rows.append(common.row("kernel_fusedscan_jnp_ref", dt * 1e6, "oracle"))
+    dt, _ = common.timed(lambda: ops.filtered_topk(q, x, oi, qi, is_filter=True, k=10))
+    rows.append(common.row("kernel_fusedscan_pallas_interp", dt * 1e6,
+                           "interpret-mode (TPU target)"))
+    idx = jax.random.randint(k3, (64, 32), 0, 4096)
+    dt, _ = common.timed(lambda: ref.gather_sq_dist(x, idx, q))
+    rows.append(common.row("kernel_gatherdist_jnp_ref", dt * 1e6, "oracle"))
+    dt, _ = common.timed(lambda: ops.gather_sq_dist(x, idx, q))
+    rows.append(common.row("kernel_gatherdist_pallas_interp", dt * 1e6,
+                           "interpret-mode (TPU target)"))
+    return rows
+
+
+# ---------------------------------------------------------------- LM train/serve
+def bench_lm_steps():
+    """Reduced-config train/serve step times for a few representative archs."""
+    from repro.configs.registry import get_arch
+    from repro.models.api import get_model
+    from repro.train import AdamWConfig, make_train_step, optim
+
+    rows = []
+    for arch in ("qwen3-32b", "rwkv6-1.6b", "qwen3-moe-235b-a22b"):
+        cfg = get_arch(arch).reduced
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0))
+        ocfg = AdamWConfig(warmup_steps=1, total_steps=8)
+        ostate = optim.init(ocfg, params)
+        step = make_train_step(model, ocfg, donate=False)
+        b = {"tokens": jnp.ones((2, 64), jnp.int32),
+             "labels": jnp.ones((2, 64), jnp.int32),
+             "mask": jnp.ones((2, 64), jnp.float32)}
+        if cfg.family == "encdec":
+            b["frames"] = jnp.zeros((2, 32, cfg.d_model))
+        dt, _ = common.timed(lambda: step(params, ostate, b), warmup=1, iters=2)
+        rows.append(common.row(f"train_step_{arch}_reduced", dt * 1e6,
+                               f"tokens/s={2*64/dt:.0f}"))
+    return rows

@@ -1,0 +1,10 @@
+"""End-to-end interval-aware retrieval with an LM tower (the paper's
+deployment scenario): embed -> unified index -> IF/IS/RF/RS queries.
+
+Run:  PYTHONPATH=src python examples/interval_search_e2e.py
+This is a thin wrapper over launch/serve.py with a small default scale.
+"""
+from repro.launch.serve import main
+
+raise SystemExit(main(["--arch", "qwen1.5-4b", "--docs", "1500",
+                       "--queries", "48", "--doc-len", "24"]))

@@ -1,0 +1,2 @@
+"""Sharded checkpointing with async save and elastic restore."""
+from repro.ckpt.store import AsyncCheckpointer, latest_step, restore, save

@@ -1,0 +1,187 @@
+"""Checkpointing: sharded save/restore with elastic re-sharding.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123/
+        manifest.json     # tree structure, dtypes, step, data cursor, rng
+        arrays/<key>.npy  # one file per leaf (path-flattened)
+
+Restore takes *target shardings* — a checkpoint written on mesh A restores
+onto mesh B (different device count / axis shapes) because leaves are saved
+as full logical arrays and re-placed with ``jax.device_put`` under the new
+``NamedSharding`` (the elastic-rescale path, see ``repro.ft.elastic``).
+On a real pod the save gathers via multi-host-safe ``jax.device_get`` per
+leaf, streaming one leaf at a time to bound host memory; saves can run on a
+background thread (``async_save``) double-buffered against training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save(
+    ckpt_dir: str | pathlib.Path,
+    step: int,
+    params,
+    opt_state=None,
+    *,
+    data_cursor: int = 0,
+    extra: dict | None = None,
+    keep: int = 3,
+) -> pathlib.Path:
+    """Write one checkpoint; prunes old steps beyond ``keep``."""
+    root = pathlib.Path(ckpt_dir)
+    out = root / f"step_{step:09d}"
+    tmp = root / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    (tmp / "arrays").mkdir(parents=True)
+
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt"] = opt_state
+    flat = _flatten(tree)
+    meta = {
+        "step": step,
+        "data_cursor": data_cursor,
+        "time": time.time(),
+        "keys": {},
+        "extra": extra or {},
+    }
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace(_SEP, "__") + ".npy"
+        np.save(tmp / "arrays" / fname, arr)
+        meta["keys"][key] = {"file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+    (tmp / "manifest.json").write_text(json.dumps(meta))
+    if out.exists():
+        shutil.rmtree(out)
+    tmp.rename(out)
+
+    # prune
+    steps = sorted(p for p in root.glob("step_*") if p.is_dir())
+    for old in steps[:-keep]:
+        shutil.rmtree(old, ignore_errors=True)
+    return out
+
+
+def latest_step(ckpt_dir: str | pathlib.Path) -> int | None:
+    root = pathlib.Path(ckpt_dir)
+    steps = sorted(p.name for p in root.glob("step_*") if p.is_dir())
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore(
+    ckpt_dir: str | pathlib.Path,
+    step: int | None = None,
+    *,
+    params_template=None,
+    opt_template=None,
+    param_shardings=None,
+    opt_shardings=None,
+):
+    """Load a checkpoint; optionally re-shard onto a (possibly new) mesh.
+
+    Templates give the target pytree *structure*; shardings (same structure,
+    prefix allowed) give placement.  Returns (params, opt_state, meta).
+    """
+    root = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    src = root / f"step_{step:09d}"
+    meta = json.loads((src / "manifest.json").read_text())
+
+    flat_arrays = {}
+    for key, info in meta["keys"].items():
+        flat_arrays[key] = np.load(src / "arrays" / info["file"])
+
+    def rebuild(template, prefix, shardings):
+        if template is None:
+            return None
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+        shard_flat = (
+            _flatten(shardings) if shardings is not None else {}
+        )
+        out = []
+        for path, leaf in leaves_with_path[0]:
+            key = prefix + _SEP + _SEP.join(
+                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                for p in path
+            )
+            arr = flat_arrays[key]
+            sub = _SEP.join(
+                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                for p in path
+            )
+            sh = shard_flat.get(sub)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(leaves_with_path[1], out)
+
+    params = rebuild(params_template, "params", param_shardings)
+    opt = rebuild(opt_template, "opt", opt_shardings)
+    return params, opt, meta
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing, double-buffered against training.
+
+    ``save`` snapshots device arrays to host synchronously (cheap relative to
+    a training step) and writes files on the worker thread; ``wait`` joins
+    before the next save or at shutdown so at most one write is in flight.
+    """
+
+    def __init__(self, ckpt_dir: str | pathlib.Path, keep: int = 3):
+        self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_path: pathlib.Path | None = None
+
+    def save(self, step: int, params, opt_state=None, **kw):
+        self.wait()
+        host_params = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), params)
+        host_opt = (
+            jax.tree.map(lambda a: np.asarray(jax.device_get(a)), opt_state)
+            if opt_state is not None
+            else None
+        )
+
+        def work():
+            self.last_path = save(
+                self.ckpt_dir, step, host_params, host_opt, keep=self.keep, **kw
+            )
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

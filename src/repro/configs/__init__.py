@@ -1,0 +1,4 @@
+"""Assigned-architecture configs (public literature; see each file's source
+tag) + the paper's own index configs.  ``registry.get_arch(name)`` is the
+single entry point used by --arch flags everywhere."""
+from repro.configs.registry import ARCHS, ArchSpec, get_arch, list_archs

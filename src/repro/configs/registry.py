@@ -1,0 +1,177 @@
+"""Architecture registry + the four assigned input shapes.
+
+Every (arch × shape) cell is well-defined here; ``input_specs`` returns the
+exact input pytree for the step the shape lowers (``train_step`` for
+train_4k, ``prefill`` for prefill_32k, ``serve_step`` for decode_*/long_*) —
+as real arrays (``concrete=True``, smoke tests / CPU runs) or as
+ShapeDtypeStructs (dry-runs: no allocation).
+
+Skips (DESIGN.md §5): ``long_500k`` requires sub-quadratic attention —
+runnable only for rwkv6 (SSM, O(1) state) and zamba2 (hybrid); the 8 pure
+full-attention archs skip it.  No assigned arch is encoder-only, so decode
+shapes run everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+_SUBQUADRATIC = {"rwkv6-1.6b", "zamba2-2.7b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    module: str
+    tag: str             # audio | vlm | moe | dense | ssm | hybrid
+
+    @property
+    def config(self) -> ModelConfig:
+        return importlib.import_module(f"repro.configs.{self.module}").CONFIG
+
+    @property
+    def reduced(self) -> ModelConfig:
+        return importlib.import_module(f"repro.configs.{self.module}").reduced()
+
+    def skip_reason(self, shape: str) -> str | None:
+        if shape == "long_500k" and self.name not in _SUBQUADRATIC:
+            return (
+                "long_500k needs sub-quadratic attention; "
+                f"{self.name} is pure full-attention (DESIGN.md §5)"
+            )
+        return None
+
+
+ARCHS: dict[str, ArchSpec] = {
+    s.name: s
+    for s in [
+        ArchSpec("seamless-m4t-medium", "seamless_m4t_medium", "audio"),
+        ArchSpec("chameleon-34b", "chameleon_34b", "vlm"),
+        ArchSpec("qwen3-moe-235b-a22b", "qwen3_moe_235b_a22b", "moe"),
+        ArchSpec("llama4-maverick-400b-a17b", "llama4_maverick_400b_a17b", "moe"),
+        ArchSpec("minicpm3-4b", "minicpm3_4b", "dense"),
+        ArchSpec("qwen1.5-4b", "qwen15_4b", "dense"),
+        ArchSpec("qwen3-32b", "qwen3_32b", "dense"),
+        ArchSpec("starcoder2-15b", "starcoder2_15b", "dense"),
+        ArchSpec("rwkv6-1.6b", "rwkv6_16b", "ssm"),
+        ArchSpec("zamba2-2.7b", "zamba2_27b", "hybrid"),
+    ]
+}
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (config, shape)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    *,
+    concrete: bool = False,
+    batch_override: int | None = None,
+    seq_override: int | None = None,
+):
+    """Input pytree for one cell.
+
+    train   -> {"batch": {tokens, labels, mask[, frames]}}
+    prefill -> {"tokens" [, "frames"]}
+    decode  -> {"state": DecodeState-like pytree, "tokens": (B, 1)}
+    """
+    B = batch_override or shape.global_batch
+    S = seq_override or shape.seq_len
+    mk = (lambda s, d: jnp.zeros(s, d)) if concrete else _sds
+    mki = (
+        (lambda s, d: jnp.zeros(s, d)) if concrete else _sds
+    )
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            half = S // 2
+            return {
+                "frames": mk((B, half, cfg.d_model), jnp.float32),
+                "tokens": mki((B, half), jnp.int32),
+                "labels": mki((B, half), jnp.int32),
+                "mask": mk((B, half), jnp.float32),
+            }
+        return {
+            "tokens": mki((B, S), jnp.int32),
+            "labels": mki((B, S), jnp.int32),
+            "mask": mk((B, S), jnp.float32),
+        }
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            half = S // 2
+            return {
+                "frames": mk((B, half, cfg.d_model), jnp.float32),
+                "tokens": mki((B, half), jnp.int32),
+            }
+        return {"tokens": mki((B, S), jnp.int32)}
+
+    # decode: one new token against a cache of S
+    state = decode_state_specs(cfg, B, S, concrete=concrete)
+    return {"state": state, "tokens": mki((B, 1), jnp.int32)}
+
+
+def decode_state_specs(cfg: ModelConfig, B: int, S: int, *, concrete: bool = False):
+    """Decode-state pytree (ShapeDtypeStructs by default, arrays if concrete)."""
+    from repro.models import encdec, rwkv_model, transformer, zamba
+
+    if cfg.family == "decoder":
+        fn = lambda: transformer.init_cache(cfg, B, S)
+    elif cfg.family == "rwkv6":
+        fn = lambda: rwkv_model.init_state(cfg, B, S)
+    elif cfg.family == "zamba2":
+        fn = lambda: zamba.init_state(cfg, B, S)
+    elif cfg.family == "encdec":
+        # self-attn cache at S plus precomputed cross-attn KV over S//8 frames
+        enc_len = max(S // 8, 1)
+        kv_shape = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd)
+        x_shape = (cfg.n_layers, B, enc_len, cfg.n_kv_heads, cfg.hd)
+
+        def fn():
+            return encdec.EncDecState(
+                (jnp.zeros(kv_shape, cfg.dtype), jnp.zeros(kv_shape, cfg.dtype)),
+                (jnp.zeros(x_shape, cfg.dtype), jnp.zeros(x_shape, cfg.dtype)),
+                jnp.zeros((B,), jnp.int32),
+            )
+    else:
+        raise ValueError(cfg.family)
+    if concrete:
+        return fn()
+    return jax.eval_shape(fn)

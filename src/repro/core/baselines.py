@@ -1,0 +1,222 @@
+"""Baselines from the paper's experimental section (§2.2, §5.1).
+
+* ``PostFilterIndex``   — interval-agnostic RNG-style graph (HNSW/NSG/Vamana
+  family stand-in: same candidate + prune pipeline with the semantic witness
+  conditions disabled, optional Vamana α); search retrieves an oversampled
+  top-k′ by pure similarity, then discards predicate violators.
+* ``prefilter_search``  — materialize the valid subset, exact scan over it
+  (the pre-filtering strategy; exact, pays O(n) per query).
+* ``HiPNGLite``         — hierarchical interval partition (Hi-PNG [57] style):
+  a segment tree over the attribute domain, one graph per tree node, objects
+  assigned to the lowest node containing their interval; IF queries search
+  the O(log) canonical cover of q.I, post-checking the predicate.
+* ``RRNG``              — the scalar special case (paper §3.2 末): point
+  object intervals + IF projection only == RFANN-dedicated index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import intervals as iv
+from repro.core.build import UGConfig, build_ug
+from repro.core.entry import build_entry_index, get_entry
+from repro.core.exact import DenseGraph
+from repro.core.search import SearchResult, beam_search, brute_force
+from repro.core.candidates import merge_topk
+
+
+# --------------------------------------------------------------------------
+# Post-filtering over an interval-agnostic graph
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class PostFilterIndex:
+    """Interval-agnostic proximity graph + oversample-then-filter search."""
+
+    x: jnp.ndarray
+    intervals: jnp.ndarray
+    graph: DenseGraph
+    build_seconds: float = 0.0
+
+    @classmethod
+    def build(cls, x, intervals, config: UGConfig = UGConfig(), seed: int = 0):
+        x = jnp.asarray(x)
+        intervals = jnp.asarray(intervals)
+        cfg = dataclasses.replace(config, unified=False)
+        t0 = time.perf_counter()
+        graph = build_ug(jax.random.key(seed), x, intervals, cfg)
+        jax.block_until_ready(graph.nbrs)
+        return cls(x, intervals, graph, time.perf_counter() - t0)
+
+    def search(
+        self, q_v, q_int, *, sem: iv.Semantics, ef: int = 64, k: int = 10,
+        oversample: int = 4, max_steps: int = 0,
+    ) -> SearchResult:
+        """Similarity-only beam search for k′ = oversample·k, then filter."""
+        n = self.x.shape[0]
+        q_v = jnp.asarray(q_v)
+        q_int = jnp.asarray(q_int)
+        # Unconstrained search: every edge passes, every node matches.
+        free_int = jnp.broadcast_to(
+            jnp.asarray([[-jnp.inf, jnp.inf]], jnp.float32), q_int.shape
+        )
+        # Entry: node 0 (graph is connected enough; paper baselines use the
+        # default HNSW entry point).
+        entry_ids = jnp.zeros((q_v.shape[0],), jnp.int32)
+        kprime = min(max(k * oversample, ef), ef)
+        res = beam_search(
+            self.x, self.intervals, self.graph.nbrs, self.graph.status,
+            entry_ids, q_v, free_int,
+            sem=iv.Semantics.IF, ef=ef, k=kprime, max_steps=max_steps,
+        )
+        ok = iv.predicate(
+            sem,
+            self.intervals[jnp.clip(res.ids, 0, n - 1)],
+            q_int[:, None, :],
+        ) & (res.ids >= 0)
+        d = jnp.where(ok, res.dist, jnp.inf)
+        order = jnp.argsort(d, axis=-1)[:, :k]
+        ids = jnp.take_along_axis(res.ids, order, axis=-1)
+        d = jnp.take_along_axis(d, order, axis=-1)
+        ids = jnp.where(jnp.isfinite(d), ids, -1)
+        return SearchResult(ids, d, res.steps)
+
+
+# --------------------------------------------------------------------------
+# Pre-filtering (exact scan over the valid subset)
+# --------------------------------------------------------------------------
+def prefilter_search(x, intervals, q_v, q_int, *, sem: iv.Semantics, k: int):
+    """Pre-filtering strategy: exact, O(n·d) per query batch."""
+    return brute_force(x, intervals, jnp.asarray(q_v), jnp.asarray(q_int), sem=sem, k=k)
+
+
+# --------------------------------------------------------------------------
+# Hi-PNG-lite: hierarchical interval partition of sub-graphs
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Partition:
+    lo: float
+    hi: float
+    node_ids: np.ndarray           # global ids in this partition
+    graph: DenseGraph | None       # local graph over the partition rows
+    x: jnp.ndarray | None
+    intervals: jnp.ndarray | None
+
+
+@dataclasses.dataclass
+class HiPNGLite:
+    """Segment-tree of interval partitions, one sub-graph per tree node.
+
+    Objects live at the lowest tree node whose range contains their interval.
+    An IFANN query searches every tree node whose range intersects ``q.I``
+    (their objects are the only possible matches), post-checking containment.
+    """
+
+    partitions: List[_Partition]
+    depth: int
+    build_seconds: float = 0.0
+
+    @classmethod
+    def build(
+        cls, x, intervals, *, depth: int = 3, config: UGConfig = UGConfig(),
+        seed: int = 0, domain=(0.0, 1.0),
+    ):
+        x_np = np.asarray(x)
+        iv_np = np.asarray(intervals)
+        n = x_np.shape[0]
+        t0 = time.perf_counter()
+        parts: List[_Partition] = []
+        ranges = []
+        for level in range(depth + 1):
+            cells = 2 ** level
+            width = (domain[1] - domain[0]) / cells
+            for c in range(cells):
+                ranges.append((domain[0] + c * width, domain[0] + (c + 1) * width, level))
+        # Assign each object to the *deepest* covering range.
+        assign = np.full((n,), -1, np.int64)
+        best_level = np.full((n,), -1, np.int64)
+        for pid, (lo, hi, level) in enumerate(ranges):
+            covered = (iv_np[:, 0] >= lo) & (iv_np[:, 1] <= hi + 1e-12)
+            upgrade = covered & (level > best_level)
+            assign[upgrade] = pid
+            best_level[upgrade] = level
+        cfg = dataclasses.replace(config, unified=False)
+        for pid, (lo, hi, level) in enumerate(ranges):
+            rows = np.nonzero(assign == pid)[0].astype(np.int32)
+            if rows.size == 0:
+                parts.append(_Partition(lo, hi, rows, None, None, None))
+                continue
+            xs = jnp.asarray(x_np[rows])
+            ivs = jnp.asarray(iv_np[rows])
+            if rows.size <= 8:
+                graph = DenseGraph(
+                    jnp.broadcast_to(
+                        jnp.arange(rows.size, dtype=jnp.int32)[None, :], (rows.size, rows.size)
+                    ),
+                    jnp.full((rows.size, rows.size), iv.FLAG_BOTH, jnp.uint8),
+                )
+            else:
+                local_cfg = dataclasses.replace(
+                    cfg,
+                    ef_spatial=min(cfg.ef_spatial, max(rows.size - 1, 1)),
+                    ef_attribute=min(cfg.ef_attribute, max(rows.size - 1, 1)),
+                    exact_spatial=rows.size <= 2048,
+                )
+                graph = build_ug(jax.random.key(seed + pid), xs, ivs, local_cfg)
+            parts.append(_Partition(lo, hi, rows, graph, xs, ivs))
+        obj = cls(parts, depth, time.perf_counter() - t0)
+        return obj
+
+    def search(self, q_v, q_int, *, ef: int = 64, k: int = 10) -> SearchResult:
+        """IFANN search across intersecting partitions, merged per query."""
+        q_v = jnp.asarray(q_v)
+        q_int_np = np.asarray(q_int)
+        nq = q_v.shape[0]
+        best_ids = jnp.full((nq, k), -1, jnp.int32)
+        best_d = jnp.full((nq, k), jnp.inf, jnp.float32)
+        total_steps = jnp.zeros((nq,), jnp.int32)
+        for part in self.partitions:
+            if part.graph is None or part.node_ids.size == 0:
+                continue
+            lo, hi = part.lo, part.hi
+            touches = (q_int_np[:, 0] <= hi) & (q_int_np[:, 1] >= lo)
+            if not touches.any():
+                continue
+            # Search the whole batch (mask away non-touching queries).
+            free_int = jnp.broadcast_to(
+                jnp.asarray([[-jnp.inf, jnp.inf]], jnp.float32), (nq, 2)
+            )
+            entry = jnp.where(jnp.asarray(touches), 0, -1).astype(jnp.int32)
+            kk = min(4 * k, max(part.node_ids.size, 1), ef)
+            res = beam_search(
+                part.x, part.intervals, part.graph.nbrs, part.graph.status,
+                entry, q_v, free_int,
+                sem=iv.Semantics.IF, ef=ef, k=kk,
+            )
+            nloc = part.x.shape[0]
+            ok = iv.predicate(
+                iv.Semantics.IF,
+                part.intervals[jnp.clip(res.ids, 0, nloc - 1)],
+                jnp.asarray(q_int)[:, None, :],
+            ) & (res.ids >= 0)
+            d = jnp.where(ok, res.dist, jnp.inf)
+            gids = jnp.asarray(part.node_ids)[jnp.clip(res.ids, 0, nloc - 1)]
+            gids = jnp.where(jnp.isfinite(d), gids, -1)
+            best_ids, best_d = merge_topk(best_ids, best_d, gids, d, k)
+            total_steps = total_steps + res.steps
+        return SearchResult(best_ids, best_d, total_steps)
+
+
+# --------------------------------------------------------------------------
+# RRNG — the scalar / RFANN special case (URNG with point intervals, IF only)
+# --------------------------------------------------------------------------
+def build_rrng(key, x, scalars, config: UGConfig = UGConfig()) -> DenseGraph:
+    """RRNG [64] as the degenerate URNG (paper §3.2): I_o = [a, a], IF bit."""
+    a = jnp.asarray(scalars).reshape(-1, 1)
+    point_intervals = jnp.concatenate([a, a], axis=1)
+    return build_ug(key, jnp.asarray(x), point_intervals, config)

@@ -1,0 +1,136 @@
+"""Iterative UG construction (paper Alg. 2) with repair sets.
+
+Each iteration refines the candidate pool of every node by merging the
+previously retained neighbors with the repair candidates produced when edges
+were pruned (the pruned endpoint ``v`` is offered to its witness ``w`` so the
+monotone continuation path through ``w`` can be explored next round).
+
+TPU reformulation: repair sets are fixed-width per-node buffers filled by a
+sort-by-witness + segment-rank scatter — no dynamic allocation; the pool
+merge is padded-concat + dedup handled inside ``unified_prune``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import intervals as iv
+from repro.core.candidates import generate_candidates
+from repro.core.exact import DenseGraph
+from repro.core.prune import unified_prune
+
+
+@dataclasses.dataclass(frozen=True)
+class UGConfig:
+    """Build hyper-parameters; defaults follow the paper's §5.1 (scaled names).
+
+    Paper defaults: ef_spatial=128, ef_attribute=300, max_edges_IF =
+    max_edges_IS = 256, 5 refinement iterations.
+    """
+
+    ef_spatial: int = 128
+    ef_attribute: int = 300
+    max_edges_if: int = 256
+    max_edges_is: int = 256
+    iterations: int = 5
+    repair_width: int = 32          # W_max: bounded repair set per node
+    alpha: float = 1.0              # RNG slack (1.0 = paper-faithful)
+    unified: bool = True            # False = classical interval-agnostic RNG
+    nnd_iters: int = 6
+    exact_spatial: bool = False     # exact KNN candidates (small n oracle)
+    block: int = 1024               # nodes pruned per jitted block
+
+
+def scatter_repairs(
+    w_ids: jnp.ndarray, v_ids: jnp.ndarray, n: int, width: int
+) -> jnp.ndarray:
+    """Build fixed-width repair sets W(w) from flat (w, v) pairs (Alg. 2 l.11-12)."""
+    valid = (w_ids >= 0) & (v_ids >= 0)
+    seg = jnp.where(valid, w_ids, n)
+    order = jnp.argsort(seg, stable=True)
+    seg_s = seg[order]
+    v_s = v_ids[order]
+    first = jnp.searchsorted(seg_s, seg_s, side="left")
+    rank = jnp.arange(seg_s.shape[0]) - first
+    ok = (seg_s < n) & (rank < width)
+    out = jnp.full((n + 1, width), -1, jnp.int32)
+    out = out.at[jnp.where(ok, seg_s, n), jnp.where(ok, rank, 0)].set(
+        jnp.where(ok, v_s, -1), mode="drop"
+    )
+    return out[:n]
+
+
+def _prune_all(
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    cand: jnp.ndarray,
+    cfg: UGConfig,
+    progress: Callable[[str], None] | None = None,
+):
+    """One full pruning sweep (Alg. 2 lines 8-9) over all nodes, blocked."""
+    n = x.shape[0]
+    keep = cfg.max_edges_if + cfg.max_edges_is
+    keep = min(keep, cand.shape[1])
+    nbrs_l, stat_l, wpair_w, wpair_v = [], [], [], []
+    for s in range(0, n, cfg.block):
+        u = jnp.arange(s, min(s + cfg.block, n), dtype=jnp.int32)
+        res = unified_prune(
+            u, cand[s : s + cfg.block], x, intervals,
+            m_if=cfg.max_edges_if, m_is=cfg.max_edges_is,
+            alpha=cfg.alpha, unified=cfg.unified,
+        )
+        # Compact retained neighbors to the front (ascending distance).
+        score = jnp.where(res.status > 0, res.dist, jnp.inf)
+        order = jnp.argsort(score, axis=-1)[:, :keep]
+        ids = jnp.take_along_axis(res.order, order, axis=-1)
+        st = jnp.take_along_axis(res.status, order, axis=-1)
+        live = jnp.isfinite(jnp.take_along_axis(score, order, axis=-1))
+        nbrs_l.append(jnp.where(live, ids, -1))
+        stat_l.append(jnp.where(live, st, 0))
+        # Repair pairs (w, v): witness gets the pruned endpoint.
+        for rep in (res.repair_if, res.repair_is):
+            wpair_w.append(rep.reshape(-1))
+            wpair_v.append(jnp.where(rep >= 0, res.order, -1).reshape(-1))
+        if progress is not None:
+            progress(f"prune block {s}:{min(s + cfg.block, n)}")
+    nbrs = jnp.concatenate(nbrs_l)
+    stat = jnp.concatenate(stat_l)
+    return nbrs, stat, jnp.concatenate(wpair_w), jnp.concatenate(wpair_v)
+
+
+def build_ug(
+    key: jax.Array,
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    cfg: UGConfig = UGConfig(),
+    progress: Callable[[str], None] | None = None,
+) -> DenseGraph:
+    """Paper Alg. 1 + Alg. 2: candidate generation then T pruning iterations."""
+    n = x.shape[0]
+    cand = generate_candidates(
+        key, x, intervals,
+        ef_spatial=cfg.ef_spatial, ef_attribute=cfg.ef_attribute,
+        nnd_iters=cfg.nnd_iters, exact_spatial=cfg.exact_spatial,
+    )
+    if progress is not None:
+        progress(f"candidates: shape {cand.shape}")
+
+    repair = jnp.full((n, cfg.repair_width), -1, jnp.int32)
+    nbrs = stat = None
+    for t in range(cfg.iterations):
+        pool = cand if t == 0 else jnp.concatenate([cand, repair], axis=1)
+        nbrs, stat, w_w, w_v = _prune_all(x, intervals, pool, cfg, progress)
+        cand = nbrs  # retained neighbors seed the next round (Alg. 2 line 10)
+        repair = scatter_repairs(w_w, w_v, n, cfg.repair_width)
+        if progress is not None:
+            deg = float(jnp.mean(jnp.sum(nbrs >= 0, axis=1)))
+            progress(f"iter {t + 1}/{cfg.iterations}: mean degree {deg:.1f}")
+
+    # Trim trailing all-pad columns.
+    live_cols = int(jnp.max(jnp.sum(nbrs >= 0, axis=1)))
+    live_cols = max(live_cols, 1)
+    return DenseGraph(nbrs[:, :live_cols], stat[:, :live_cols])

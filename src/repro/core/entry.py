@@ -1,0 +1,95 @@
+"""Entry-node acquisition (paper Alg. 5, Lemma 4.3).
+
+Nodes are sorted by interval left endpoint; two auxiliary arrays — the suffix
+minimum and prefix maximum of right endpoints (with arg-indices) — let a valid
+entry node be found in O(log n) for both IF and IS queries, or NULL certified
+when no valid node exists.
+
+Built with ``jax.lax.associative_scan`` so the structure is jittable and can
+be constructed per shard inside ``shard_map`` (each index shard owns its own
+entry arrays; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import intervals as iv
+
+
+class EntryIndex(NamedTuple):
+    node_id: jnp.ndarray        # (n,) int32 — node ids sorted by left endpoint
+    l_sorted: jnp.ndarray       # (n,) f32   — sorted left endpoints
+    suffmin_r_val: jnp.ndarray  # (n,) f32   — min right endpoint over suffix
+    suffmin_r_id: jnp.ndarray   # (n,) int32 — arg node id of that minimum
+    prefmax_r_val: jnp.ndarray  # (n,) f32   — max right endpoint over prefix
+    prefmax_r_id: jnp.ndarray   # (n,) int32 — arg node id of that maximum
+
+
+def _argscan(vals: jnp.ndarray, ids: jnp.ndarray, op: str, reverse: bool):
+    """Associative scan carrying (value, arg-id) pairs."""
+
+    def combine(a, b):
+        av, ai = a
+        bv, bi = b
+        if op == "min":
+            take_b = bv < av
+        else:
+            take_b = bv > av
+        return jnp.where(take_b, bv, av), jnp.where(take_b, bi, ai)
+
+    return jax.lax.associative_scan(combine, (vals, ids), reverse=reverse)
+
+
+def build_entry_index(
+    intervals: jnp.ndarray, node_mask: jnp.ndarray | None = None
+) -> EntryIndex:
+    """Sort by left endpoint and precompute suffix-min / prefix-max of rights.
+
+    ``node_mask`` excludes nodes (masked rows get ``l=+inf`` so they sort last
+    and sentinel rights so they never win a scan) — used for per-shard or
+    filtered sub-index entry structures.
+    """
+    n = intervals.shape[0]
+    l = intervals[:, 0].astype(jnp.float32)
+    r = intervals[:, 1].astype(jnp.float32)
+    if node_mask is not None:
+        l = jnp.where(node_mask, l, jnp.inf)
+        r_for_min = jnp.where(node_mask, r, jnp.inf)
+        r_for_max = jnp.where(node_mask, r, -jnp.inf)
+    else:
+        r_for_min = r
+        r_for_max = r
+    order = jnp.argsort(l, stable=True).astype(jnp.int32)
+    l_s = l[order]
+    rmin_s = r_for_min[order]
+    rmax_s = r_for_max[order]
+    sv, si = _argscan(rmin_s, order, "min", reverse=True)
+    pv, pi = _argscan(rmax_s, order, "max", reverse=False)
+    return EntryIndex(order, l_s, sv, si, pv, pi)
+
+
+def get_entry(
+    eidx: EntryIndex, q_interval: jnp.ndarray, sem: iv.Semantics
+) -> jnp.ndarray:
+    """Alg. 5 for a batch of query intervals (..., 2) -> (...,) int32 ids.
+
+    Returns -1 when no valid node exists (the NULL case of Lemma 4.3).
+    RF == IF and RS == IS after degenerate-interval reduction (§2.1).
+    """
+    n = eidx.l_sorted.shape[0]
+    ql = q_interval[..., 0]
+    qr = q_interval[..., 1]
+    if sem in (iv.Semantics.IF, iv.Semantics.RF):
+        i = jnp.searchsorted(eidx.l_sorted, ql, side="left")
+        ok = i < n
+        ic = jnp.clip(i, 0, n - 1)
+        ok = ok & (eidx.suffmin_r_val[ic] <= qr)
+        return jnp.where(ok, eidx.suffmin_r_id[ic], -1).astype(jnp.int32)
+    i = jnp.searchsorted(eidx.l_sorted, ql, side="right") - 1
+    ok = i >= 0
+    ic = jnp.clip(i, 0, n - 1)
+    ok = ok & (eidx.prefmax_r_val[ic] >= qr)
+    return jnp.where(ok, eidx.prefmax_r_id[ic], -1).astype(jnp.int32)

@@ -1,0 +1,140 @@
+"""Exact URNG / RNG reference constructions (paper Def. 3.1, Thm 3.8).
+
+These are the O(n³) oracles used by tests and by the benchmark ground truth.
+They evaluate the URNG definition *exactly*: per node, candidates are all
+other nodes in ascending-distance order with unbounded degree budgets —
+Thm 4.1 shows this coincides with ``UnifiedPrune`` at ``M = ∞`` over the full
+candidate graph, so we reuse :func:`repro.core.prune.unified_prune`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import intervals as iv
+from repro.core.prune import unified_prune
+
+
+class DenseGraph(NamedTuple):
+    """Dense directed graph: per-node neighbor ids + semantic bitmask."""
+
+    nbrs: jnp.ndarray    # (n, M) int32, -1 padded, ascending distance
+    status: jnp.ndarray  # (n, M) uint8 semantic bitmask
+
+    @property
+    def n(self) -> int:
+        return self.nbrs.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.nbrs.shape[1]
+
+    def degree(self, flag: int) -> jnp.ndarray:
+        return jnp.sum(((self.status & flag) > 0) & (self.nbrs >= 0), axis=1)
+
+    def projection(self, sem: iv.Semantics) -> "DenseGraph":
+        """Semantic projection G^σ (Thm 3.3): keep only σ-active edges."""
+        active = ((self.status & sem.flag) > 0) & (self.nbrs >= 0)
+        return DenseGraph(jnp.where(active, self.nbrs, -1), jnp.where(active, self.status, 0))
+
+    def induced(self, node_mask: jnp.ndarray) -> "DenseGraph":
+        """Induced subgraph on ``node_mask`` (both endpoints valid)."""
+        nbr_ok = (self.nbrs >= 0) & node_mask[jnp.clip(self.nbrs, 0, self.n - 1)]
+        nbr_ok = nbr_ok & node_mask[:, None]
+        return DenseGraph(
+            jnp.where(nbr_ok, self.nbrs, -1), jnp.where(nbr_ok, self.status, 0)
+        )
+
+
+def build_exact(
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    *,
+    unified: bool = True,
+    alpha: float = 1.0,
+    node_mask: jnp.ndarray | None = None,
+    block: int = 128,
+) -> DenseGraph:
+    """Exact URNG (``unified=True``) or classical RNG (``unified=False``).
+
+    ``node_mask`` restricts construction to a subset of nodes — used by the
+    structural-heredity tests (Thm 3.5/4.1): building on the masked set must
+    equal inducing the full graph onto it.
+    """
+    n = x.shape[0]
+    ids = np.arange(n, dtype=np.int32)
+    if node_mask is not None:
+        mask_np = np.asarray(node_mask)
+    else:
+        mask_np = np.ones((n,), bool)
+
+    # Full candidate row: every valid node (self removed inside unified_prune).
+    valid_ids = ids[mask_np]
+    cand_row = np.full((n,), -1, np.int32)
+    cand_row[: valid_ids.shape[0]] = valid_ids
+
+    nbrs_out = np.full((n, n), -1, np.int32)
+    stat_out = np.zeros((n, n), np.uint8)
+    u_all = valid_ids
+    for s in range(0, u_all.shape[0], block):
+        u_blk = jnp.asarray(u_all[s : s + block])
+        cand = jnp.asarray(np.broadcast_to(cand_row, (u_blk.shape[0], n)).copy())
+        res = unified_prune(
+            u_blk, cand, x, intervals, m_if=n, m_is=n, alpha=alpha, unified=unified
+        )
+        nbrs_out[np.asarray(u_blk)] = np.asarray(res.order)
+        stat_out[np.asarray(u_blk)] = np.asarray(res.status)
+
+    # Fully pruned edges carry no semantics: drop them from the adjacency.
+    dead = stat_out == 0
+    nbrs_out[dead] = -1
+
+    # Compact the column dimension to the max live degree.
+    live = nbrs_out >= 0
+    max_deg = max(int(live.sum(axis=1).max()), 1)
+    comp_n = np.full((n, max_deg), -1, np.int32)
+    comp_s = np.zeros((n, max_deg), np.uint8)
+    for u in range(n):
+        sel = live[u]
+        k = int(sel.sum())
+        comp_n[u, :k] = nbrs_out[u, sel]
+        comp_s[u, :k] = stat_out[u, sel]
+    return DenseGraph(jnp.asarray(comp_n), jnp.asarray(comp_s))
+
+
+def greedy_monotonic_path(
+    graph: DenseGraph,
+    x: jnp.ndarray,
+    sem: iv.Semantics,
+    src: int,
+    dst: int,
+    max_steps: int | None = None,
+) -> list[int]:
+    """Greedy walk toward ``dst`` along σ-active edges, moving only to
+    strictly-closer neighbors (Def. 3.2).  Returns the visited path; reaching
+    ``dst`` certifies a monotonic path exists (Thm 3.3 / Cor. 3.4 check)."""
+    xn = np.asarray(x, np.float64)
+    nbrs = np.asarray(graph.nbrs)
+    stat = np.asarray(graph.status)
+    tgt = xn[dst]
+    cur = src
+    path = [cur]
+    limit = max_steps or graph.n + 1
+    for _ in range(limit):
+        if cur == dst:
+            return path
+        row = nbrs[cur]
+        ok = (row >= 0) & ((stat[cur] & sem.flag) > 0)
+        if not ok.any():
+            return path
+        cand = row[ok]
+        d = ((xn[cand] - tgt) ** 2).sum(axis=1)
+        j = int(np.argmin(d))
+        cur_d = ((xn[cur] - tgt) ** 2).sum()
+        if d[j] >= cur_d:  # no strictly-closer neighbor: stuck
+            return path
+        cur = int(cand[j])
+        path.append(cur)
+    return path

@@ -1,0 +1,144 @@
+"""UGIndex — the user-facing unified interval-aware index (paper §4).
+
+One physical graph + per-edge semantic bitmask answers IFANN / ISANN / RFANN /
+RSANN queries (paper §2.1).  RF datasets store scalars as point intervals;
+RS queries pass point query intervals — both reductions are exact (§2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import intervals as iv
+from repro.core.build import UGConfig, build_ug
+from repro.core.entry import EntryIndex, build_entry_index, get_entry
+from repro.core.exact import DenseGraph
+from repro.core.search import SearchResult, beam_search, brute_force
+
+
+@dataclasses.dataclass
+class UGIndex:
+    """Unified graph index: corpus, intervals, graph, entry structure."""
+
+    x: jnp.ndarray            # (n, d)
+    intervals: jnp.ndarray    # (n, 2)
+    graph: DenseGraph
+    entry: EntryIndex
+    config: UGConfig
+    build_seconds: float = 0.0
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        x,
+        intervals,
+        config: UGConfig = UGConfig(),
+        seed: int = 0,
+        progress=None,
+    ) -> "UGIndex":
+        x = jnp.asarray(x)
+        intervals = jnp.asarray(intervals)
+        t0 = time.perf_counter()
+        graph = build_ug(jax.random.key(seed), x, intervals, config, progress)
+        eidx = build_entry_index(intervals)
+        jax.block_until_ready(graph.nbrs)
+        dt = time.perf_counter() - t0
+        return cls(x, intervals, graph, eidx, config, dt)
+
+    # ----------------------------------------------------------------- search
+    def search(
+        self,
+        q_v,
+        q_int,
+        *,
+        sem: iv.Semantics = iv.Semantics.IF,
+        ef: int = 64,
+        k: int = 10,
+        max_steps: int = 0,
+    ) -> SearchResult:
+        entry_ids = get_entry(self.entry, jnp.asarray(q_int), sem)
+        return beam_search(
+            self.x, self.intervals, self.graph.nbrs, self.graph.status,
+            entry_ids, jnp.asarray(q_v), jnp.asarray(q_int),
+            sem=sem, ef=ef, k=k, max_steps=max_steps,
+        )
+
+    def ground_truth(self, q_v, q_int, *, sem: iv.Semantics, k: int) -> SearchResult:
+        return brute_force(
+            self.x, self.intervals, jnp.asarray(q_v), jnp.asarray(q_int), sem=sem, k=k
+        )
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    def memory_bytes(self) -> int:
+        g = self.graph
+        return int(
+            g.nbrs.size * g.nbrs.dtype.itemsize
+            + g.status.size * g.status.dtype.itemsize
+            + self.entry.l_sorted.size * 4 * 6
+        )
+
+    def degree_stats(self) -> dict:
+        g = self.graph
+        d_if = np.asarray(g.degree(iv.FLAG_IF))
+        d_is = np.asarray(g.degree(iv.FLAG_IS))
+        return {
+            "mean_if": float(d_if.mean()),
+            "mean_is": float(d_is.mean()),
+            "max_if": int(d_if.max()),
+            "max_is": int(d_is.max()),
+            "edges": int((np.asarray(g.nbrs) >= 0).sum()),
+        }
+
+    # ------------------------------------------------------------------- io
+    def save(self, path: str | pathlib.Path) -> None:
+        path = pathlib.Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        np.savez_compressed(
+            path / "index.npz",
+            x=np.asarray(self.x),
+            intervals=np.asarray(self.intervals),
+            nbrs=np.asarray(self.graph.nbrs),
+            status=np.asarray(self.graph.status),
+        )
+        meta = dataclasses.asdict(self.config)
+        meta["build_seconds"] = self.build_seconds
+        (path / "meta.json").write_text(json.dumps(meta, indent=2))
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "UGIndex":
+        path = pathlib.Path(path)
+        blob = np.load(path / "index.npz")
+        meta = json.loads((path / "meta.json").read_text())
+        build_seconds = meta.pop("build_seconds", 0.0)
+        cfg = UGConfig(**meta)
+        x = jnp.asarray(blob["x"])
+        intervals = jnp.asarray(blob["intervals"])
+        graph = DenseGraph(jnp.asarray(blob["nbrs"]), jnp.asarray(blob["status"]))
+        return cls(x, intervals, graph, build_entry_index(intervals), cfg, build_seconds)
+
+
+def recall(result: SearchResult, truth: SearchResult) -> float:
+    """recall@k as in the paper §5.1 (set overlap with brute-force truth)."""
+    r = np.asarray(result.ids)
+    t = np.asarray(truth.ids)
+    hits = 0
+    denom = 0
+    for i in range(r.shape[0]):
+        tset = set(int(v) for v in t[i] if v >= 0)
+        if not tset:
+            continue
+        rset = set(int(v) for v in r[i] if v >= 0)
+        hits += len(tset & rset)
+        denom += len(tset)
+    return hits / max(denom, 1)

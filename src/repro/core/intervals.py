@@ -1,0 +1,111 @@
+"""Interval algebra for interval-aware ANN search (paper §2.1, §3).
+
+Every object carries an interval ``I_o = [l, r]`` with ``l <= r``; every query
+carries ``q.I = [a_l, a_r]``. The four query semantics of the paper reduce to
+two predicates:
+
+* IFANN:  ``I_o ⊆ q.I``             (interval-filtered)
+* ISANN:  ``q.I ⊆ I_o``             (interval-stabbing)
+* RFANN:  IFANN with degenerate object intervals ``I_o = [a, a]``
+* RSANN:  ISANN with degenerate query interval  ``q.I = [t, t]``
+
+The URNG witness conditions (Def. 3.1) are:
+
+* ``Φ_IF(u, v, w): I_w ⊆ I_u ∪ I_v``   with ``∪`` the *hull* (footnote 2)
+* ``Φ_IS(u, v, w): I_u ∩ I_v ⊆ I_w``   considered only when ``I_u ∩ I_v ≠ ∅``
+
+All functions broadcast: intervals are arrays whose last axis has size 2
+(``[..., 0] = l``, ``[..., 1] = r``).
+"""
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+# Semantic bit layout of the per-edge status byte (paper Def. 3.1 bitmask).
+FLAG_IF = 1  # bit 0: edge active for interval-filtered (IF) semantics
+FLAG_IS = 2  # bit 1: edge active for interval-stabbing (IS) semantics
+FLAG_BOTH = FLAG_IF | FLAG_IS
+
+
+class Semantics(enum.Enum):
+    """Query semantics; RF/RS are degenerate IF/IS (paper §2.1)."""
+
+    IF = "IF"
+    IS = "IS"
+    RF = "RF"  # scalar-attribute filtering == IF with point object intervals
+    RS = "RS"  # stabbing == IS with point query interval
+
+    @property
+    def flag(self) -> int:
+        return FLAG_IF if self in (Semantics.IF, Semantics.RF) else FLAG_IS
+
+
+def hull(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Interval hull ``a ∪ b = [min(l_a, l_b), max(r_a, r_b)]`` (footnote 2)."""
+    lo = jnp.minimum(a[..., 0], b[..., 0])
+    hi = jnp.maximum(a[..., 1], b[..., 1])
+    return jnp.stack([lo, hi], axis=-1)
+
+
+def intersection(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Interval intersection (may be empty: ``l > r``)."""
+    lo = jnp.maximum(a[..., 0], b[..., 0])
+    hi = jnp.minimum(a[..., 1], b[..., 1])
+    return jnp.stack([lo, hi], axis=-1)
+
+
+def is_empty(a: jnp.ndarray) -> jnp.ndarray:
+    return a[..., 0] > a[..., 1]
+
+
+def contains(outer: jnp.ndarray, inner: jnp.ndarray) -> jnp.ndarray:
+    """``inner ⊆ outer`` (both non-degenerate interval arrays)."""
+    return (outer[..., 0] <= inner[..., 0]) & (inner[..., 1] <= outer[..., 1])
+
+
+def phi_if(iu: jnp.ndarray, iv: jnp.ndarray, iw: jnp.ndarray) -> jnp.ndarray:
+    """IF witness condition ``I_w ⊆ I_u ∪ I_v`` (Def. 3.1)."""
+    return contains(hull(iu, iv), iw)
+
+
+def phi_is(iu: jnp.ndarray, iv: jnp.ndarray, iw: jnp.ndarray) -> jnp.ndarray:
+    """IS witness condition ``I_u ∩ I_v ⊆ I_w``; empty intersections are
+    excluded upstream (Alg. 3 lines 7-8 clear the IS bit when ``I_u∩I_v=∅``)."""
+    inter = intersection(iu, iv)
+    nonempty = ~is_empty(inter)
+    return nonempty & (iw[..., 0] <= inter[..., 0]) & (iw[..., 1] >= inter[..., 1])
+
+
+def predicate(sem: Semantics, obj: jnp.ndarray, query: jnp.ndarray) -> jnp.ndarray:
+    """Query validity predicate; ``obj`` broadcasts against ``query``.
+
+    RF treats ``obj`` as point intervals (callers store scalars as [a, a]);
+    RS treats ``query`` as a point interval ([t, t]).  Both reduce to IF/IS.
+    """
+    if sem in (Semantics.IF, Semantics.RF):
+        return contains(query, obj)
+    return contains(obj, query)
+
+
+def query_valid_mask(sem: Semantics, intervals: jnp.ndarray, q_interval: jnp.ndarray) -> jnp.ndarray:
+    """Validity of every object for one query: (n, 2) x (2,) -> (n,) bool."""
+    return predicate(sem, intervals, q_interval[None, :])
+
+
+def sample_uniform_intervals(key, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Uniform interval model of the paper's complexity analysis (§3.2, App. A):
+    endpoints are two i.i.d. U(0,1) draws per object, sorted."""
+    import jax
+
+    pts = jax.random.uniform(key, (n, 2), dtype=dtype)
+    return jnp.sort(pts, axis=-1)
+
+
+def sample_point_intervals(key, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Degenerate intervals for the RFANN special case (scalar attributes)."""
+    import jax
+
+    a = jax.random.uniform(key, (n, 1), dtype=dtype)
+    return jnp.concatenate([a, a], axis=-1)

@@ -1,0 +1,229 @@
+"""Interval-aware beam search over the unified graph (paper Alg. 4).
+
+TPU adaptation (DESIGN.md §2): the per-query priority queues of the paper
+become a fixed-width ``(B, ef)`` beam advanced by a ``lax.while_loop``; the
+visited hash-set becomes an exact per-query bitmap updated with one
+deduplicated scatter-add per step; each expansion scores all ``M`` neighbors
+of the selected node in a single gather + matmul.  The search never leaves
+the query-valid subgraph — only neighbors whose semantic bit is set *and*
+whose interval satisfies the query predicate enter the beam (Alg. 4 lines
+11-20); structural heredity (Thm 4.1) is what makes this correct.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import intervals as iv
+from repro.core.entry import EntryIndex, get_entry
+
+
+class SearchResult(NamedTuple):
+    ids: jnp.ndarray    # (B, k) int32 node ids, ascending distance, -1 pad
+    dist: jnp.ndarray   # (B, k) f32 squared distances (+inf pad)
+    steps: jnp.ndarray  # (B,) int32 expansion count (work metric for QPS)
+
+
+def _bitmap_test(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    word = jnp.clip(ids, 0, None) >> 5
+    bit = jnp.clip(ids, 0, None) & 31
+    return ((bitmap[word] >> bit) & 1).astype(bool)
+
+
+def _bitmap_set(bitmap: jnp.ndarray, ids: jnp.ndarray, fresh: jnp.ndarray) -> jnp.ndarray:
+    """OR the bits of ``ids[fresh]`` into the bitmap with one scatter-add.
+
+    Neighbor lists are duplicate-free (build-time invariant) and ``fresh``
+    excludes already-set bits, so add == or.
+    """
+    nwords = bitmap.shape[0]
+    word = jnp.where(fresh, ids >> 5, nwords)  # out-of-range rows are dropped
+    bit = (ids & 31).astype(jnp.uint32)
+    return bitmap.at[word].add(
+        jnp.where(fresh, jnp.uint32(1) << bit, jnp.uint32(0)), mode="drop"
+    )
+
+
+def _search_one(
+    q_v: jnp.ndarray,        # (d,)
+    q_int: jnp.ndarray,      # (2,)
+    start: jnp.ndarray,      # () int32, -1 = no valid entry
+    x: jnp.ndarray,          # (n, d)
+    intervals: jnp.ndarray,  # (n, 2)
+    nbrs: jnp.ndarray,       # (n, M)
+    status: jnp.ndarray,     # (n, M) uint8
+    sem_flag: int,
+    sem_is_filter: bool,     # True for IF/RF (obj ⊆ query), False for IS/RS
+    ef: int,
+    max_steps: int,
+):
+    n, d = x.shape
+    M = nbrs.shape[1]
+    nwords = (n + 31) // 32
+
+    q32 = q_v.astype(jnp.float32)
+
+    def dist_to(ids):
+        xs = x[jnp.clip(ids, 0, n - 1)].astype(jnp.float32)
+        diff = xs - q32[None, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    has_entry = start >= 0
+    start_c = jnp.clip(start, 0, n - 1)
+
+    beam_ids = jnp.full((ef,), -1, jnp.int32).at[0].set(jnp.where(has_entry, start_c, -1))
+    beam_d = jnp.full((ef,), jnp.inf, jnp.float32).at[0].set(
+        jnp.where(has_entry, dist_to(start_c[None])[0], jnp.inf)
+    )
+    expanded = jnp.zeros((ef,), bool)
+    visited = jnp.zeros((nwords,), jnp.uint32)
+    visited = _bitmap_set(visited, start_c[None], has_entry[None])
+
+    def predicate(obj_int):
+        if sem_is_filter:
+            return iv.contains(q_int[None, :], obj_int)
+        return iv.contains(obj_int, q_int[None, :])
+
+    def cond(state):
+        beam_ids, beam_d, expanded, visited, steps = state
+        frontier = (~expanded) & jnp.isfinite(beam_d)
+        return jnp.any(frontier) & (steps < max_steps)
+
+    def body(state):
+        beam_ids, beam_d, expanded, visited, steps = state
+        # ExtractMin over unexpanded beam entries (Alg. 4 line 6).
+        sel_d = jnp.where(expanded, jnp.inf, beam_d)
+        j = jnp.argmin(sel_d)
+        u = beam_ids[j]
+        expanded = expanded.at[j].set(True)
+        u_c = jnp.clip(u, 0, n - 1)
+
+        nb = nbrs[u_c]                      # (M,)
+        st = status[u_c]
+        present = nb >= 0
+        nb_c = jnp.clip(nb, 0, n - 1)
+        seen = _bitmap_test(visited, nb_c) | ~present
+
+        sem_ok = (st & sem_flag) > 0
+        pred_ok = predicate(intervals[nb_c])
+        valid = present & ~seen & sem_ok & pred_ok
+        # Visited semantics follow the σ-projection G^σ the theory searches
+        # (Thm 3.3): mark nodes that were scored (valid) or are node-level
+        # dead for this query (predicate fails — can never become valid), but
+        # NOT nodes skipped only because *this* edge's σ-bit is off: they may
+        # be reachable via another σ-active edge.  (Deviation from Alg. 4's
+        # literal line 10; see DESIGN.md §6.)
+        visited = _bitmap_set(visited, nb_c, present & ~seen & (valid | ~pred_ok))
+        nd = jnp.where(valid, dist_to(nb_c), jnp.inf)
+
+        # Merge candidates into the beam; keep ef best (RemoveMax of Alg. 4).
+        all_ids = jnp.concatenate([beam_ids, jnp.where(valid, nb_c, -1)])
+        all_d = jnp.concatenate([beam_d, nd])
+        all_exp = jnp.concatenate([expanded, jnp.zeros((M,), bool)])
+        order = jnp.argsort(all_d)[:ef]
+        return (
+            all_ids[order],
+            all_d[order],
+            all_exp[order],
+            visited,
+            steps + 1,
+        )
+
+    state = (beam_ids, beam_d, expanded, visited, jnp.int32(0))
+    beam_ids, beam_d, expanded, visited, steps = jax.lax.while_loop(cond, body, state)
+    return beam_ids, beam_d, steps
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sem", "ef", "k", "max_steps")
+)
+def beam_search(
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    nbrs: jnp.ndarray,
+    status: jnp.ndarray,
+    entry_ids: jnp.ndarray,   # (B,) int32 per-query entry node (Alg. 5 output)
+    q_v: jnp.ndarray,         # (B, d)
+    q_int: jnp.ndarray,       # (B, 2)
+    *,
+    sem: iv.Semantics,
+    ef: int,
+    k: int,
+    max_steps: int = 0,
+) -> SearchResult:
+    """Batched Alg. 4.  ``max_steps=0`` derives a generous default (8·ef+32)."""
+    steps_cap = max_steps if max_steps > 0 else 8 * ef + 32
+    sem_is_filter = sem in (iv.Semantics.IF, iv.Semantics.RF)
+    run = jax.vmap(
+        lambda qv, qi, s: _search_one(
+            qv, qi, s, x, intervals, nbrs, status,
+            sem_flag=sem.flag, sem_is_filter=sem_is_filter,
+            ef=ef, max_steps=steps_cap,
+        )
+    )
+    beam_ids, beam_d, steps = run(q_v, q_int, entry_ids)
+    top_d, top_i = jax.lax.top_k(-beam_d, k)
+    ids = jnp.take_along_axis(beam_ids, top_i, axis=-1)
+    dist = -top_d
+    ids = jnp.where(jnp.isfinite(dist), ids, -1)
+    return SearchResult(ids, dist, steps)
+
+
+def search(
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    nbrs: jnp.ndarray,
+    status: jnp.ndarray,
+    eidx: EntryIndex,
+    q_v: jnp.ndarray,
+    q_int: jnp.ndarray,
+    *,
+    sem: iv.Semantics,
+    ef: int,
+    k: int,
+    max_steps: int = 0,
+) -> SearchResult:
+    """Entry acquisition (Alg. 5) + interval-aware beam search (Alg. 4)."""
+    entry_ids = get_entry(eidx, q_int, sem)
+    return beam_search(
+        x, intervals, nbrs, status, entry_ids, q_v, q_int,
+        sem=sem, ef=ef, k=k, max_steps=max_steps,
+    )
+
+
+def brute_force(
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    q_v: jnp.ndarray,
+    q_int: jnp.ndarray,
+    *,
+    sem: iv.Semantics,
+    k: int,
+    block: int = 8192,
+) -> SearchResult:
+    """Exact predicate-filtered top-k (ground truth for every benchmark)."""
+    from repro.core.candidates import merge_topk
+
+    nq = q_v.shape[0]
+    n = x.shape[0]
+    ids = jnp.full((nq, k), -1, jnp.int32)
+    d = jnp.full((nq, k), jnp.inf, jnp.float32)
+    for s in range(0, n, block):
+        xb = x[s : s + block]
+        ib = intervals[s : s + block]
+        db = jnp.sum(
+            (q_v[:, None, :].astype(jnp.float32) - xb[None, :, :].astype(jnp.float32)) ** 2,
+            axis=-1,
+        )
+        ok = iv.predicate(sem, ib[None, :, :], q_int[:, None, :])
+        db = jnp.where(ok, db, jnp.inf)
+        take = min(k, xb.shape[0])
+        neg, idx = jax.lax.top_k(-db, take)
+        bids = jnp.arange(s, s + xb.shape[0], dtype=jnp.int32)
+        bid = jnp.broadcast_to(bids[None, :], db.shape)
+        ids, d = merge_topk(ids, d, jnp.take_along_axis(bid, idx, axis=-1), -neg, k)
+    ids = jnp.where(jnp.isfinite(d), ids, -1)
+    return SearchResult(ids, d, jnp.zeros((nq,), jnp.int32))

@@ -1,0 +1,230 @@
+"""Distributed (row-sharded) unified index — the production serving path.
+
+The corpus is sharded row-wise over the ``data`` (and ``pod``) mesh axes.
+Structural heredity (Thm 3.5/4.1) is what makes shard-local graphs sound:
+each shard's sub-index is a valid unified graph over its rows, so shard-local
+beam search + a global top-k merge is a correct (and embarrassingly parallel)
+decomposition of the query.
+
+Collective schedule (see DESIGN.md §4 and EXPERIMENTS.md §Perf):
+
+* baseline merge — one ``all_gather`` of per-shard top-k over every index
+  axis, then a replicated sort;
+* hierarchical merge — intra-pod ``all_gather`` + local reduce first, then
+  the (slow, cross-pod) axis moves only ``k`` survivors per pod instead of
+  ``k`` per chip: cross-pod bytes drop by the pod size (16×).
+
+Also here: the ring-streamed exact KNN builder used to bootstrap candidate
+sets when the corpus is too large for any single host (each shard's rows
+visit every other shard once via ``ppermute`` — compute/comm overlapped by
+construction since each ring step's matmul hides the next permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import intervals as iv
+from repro.core.candidates import merge_topk
+from repro.core.entry import build_entry_index, get_entry
+from repro.core.search import beam_search
+
+
+class ShardedIndexArrays(NamedTuple):
+    """Device arrays of a row-sharded index (all sharded along axis 0 over the
+    index axes, except queries which are replicated)."""
+
+    x: jnp.ndarray          # (n, d) rows sharded
+    intervals: jnp.ndarray  # (n, 2) rows sharded
+    nbrs: jnp.ndarray       # (n, M) shard-LOCAL neighbor ids
+    status: jnp.ndarray     # (n, M)
+    global_ids: jnp.ndarray # (n,) shard-local row -> global id
+
+
+def shard_index(
+    mesh: Mesh,
+    index_axes: Sequence[str],
+    x: np.ndarray,
+    intervals: np.ndarray,
+    nbrs: np.ndarray,
+    status: np.ndarray,
+    global_ids: np.ndarray,
+) -> ShardedIndexArrays:
+    """Place host arrays onto the mesh, rows sharded over ``index_axes``."""
+    row = P(tuple(index_axes))
+    put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))
+    return ShardedIndexArrays(
+        put(x, row), put(intervals, row), put(nbrs, row),
+        put(status, row), put(global_ids, row),
+    )
+
+
+def make_sharded_search_fn(
+    mesh: Mesh,
+    *,
+    index_axes: Sequence[str] = ("data",),
+    replicated_axes: Sequence[str] = ("model",),
+    sem: iv.Semantics = iv.Semantics.IF,
+    ef: int = 64,
+    k: int = 10,
+    hierarchical: bool = True,
+):
+    """Build the jittable sharded search step.
+
+    Inside ``shard_map`` every device runs Alg. 5 + Alg. 4 on its rows, then
+    the per-shard top-k are merged across the index axes.  With
+    ``hierarchical=True`` and 2 index axes (pod, data), the merge reduces
+    intra-pod first so only ``k`` candidates per pod cross the pod axis.
+    """
+    index_axes = tuple(index_axes)
+
+    def local_search(x, ints, nbrs, status, gids, q_v, q_int):
+        # Padded rows (gids < 0) are masked out of the entry structure so a
+        # pad can never be returned as an entry node (Lemma 4.3 soundness).
+        eidx = build_entry_index(ints, node_mask=gids >= 0)
+        entry = get_entry(eidx, q_int, sem)
+        res = beam_search(
+            x, ints, nbrs, status, entry, q_v, q_int, sem=sem, ef=ef, k=k
+        )
+        nloc = x.shape[0]
+        g = jnp.where(res.ids >= 0, gids[jnp.clip(res.ids, 0, nloc - 1)], -1)
+        return g, res.dist
+
+    def merge_axis(ids, dist, axis_name):
+        """all_gather per-shard candidates along one axis and re-reduce."""
+        ga = jax.lax.all_gather(ids, axis_name, axis=1)     # (B, S, k)
+        gd = jax.lax.all_gather(dist, axis_name, axis=1)
+        B = ga.shape[0]
+        ga = ga.reshape(B, -1)
+        gd = gd.reshape(B, -1)
+        order = jnp.argsort(gd, axis=-1)[:, :k]
+        return (
+            jnp.take_along_axis(ga, order, axis=-1),
+            jnp.take_along_axis(gd, order, axis=-1),
+        )
+
+    def sharded(x, ints, nbrs, status, gids, q_v, q_int):
+        ids, dist = local_search(x, ints, nbrs, status, gids, q_v, q_int)
+        if hierarchical:
+            # innermost (fast, intra-pod) axis first, then outer axes.
+            for ax in reversed(index_axes):
+                ids, dist = merge_axis(ids, dist, ax)
+        else:
+            ids, dist = merge_axis(
+                ids, dist, index_axes if len(index_axes) > 1 else index_axes[0]
+            )
+        return ids, dist
+
+    row = P(tuple(index_axes))
+    rep = P()
+    fn = jax.shard_map(
+        sharded,
+        mesh=mesh,
+        in_specs=(row, row, row, row, row, rep, rep),
+        out_specs=(rep, rep),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+# --------------------------------------------------------------------------
+# Ring-streamed exact KNN (distributed candidate bootstrap)
+# --------------------------------------------------------------------------
+def make_ring_knn_fn(mesh: Mesh, *, axis: str = "data", k: int = 32):
+    """Exact KNN graph over a row-sharded corpus via a ``ppermute`` ring.
+
+    Each step, every shard scores its rows against the visiting column block
+    and folds the result into its running top-k; the block then moves one hop
+    around the ring.  After ``n_shards`` steps every pair has been scored.
+    This is the sharded replacement for NN-descent bootstrap on corpora that
+    exceed a single host (DESIGN.md §4).
+    """
+
+    def ring_knn(x, gids):
+        nloc = x.shape[0]
+        size = jax.lax.axis_size(axis)
+        me = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % size) for i in range(size)]
+
+        def step(carry, _):
+            blk_x, blk_ids, best_i, best_d = carry
+            d = jnp.sum(
+                (x[:, None, :].astype(jnp.float32) - blk_x[None, :, :].astype(jnp.float32)) ** 2,
+                axis=-1,
+            )
+            d = jnp.where(blk_ids[None, :] == gids[:, None], jnp.inf, d)  # self
+            take = min(k, blk_x.shape[0])
+            neg, idx = jax.lax.top_k(-d, take)
+            cand_ids = jnp.take_along_axis(
+                jnp.broadcast_to(blk_ids[None, :], d.shape), idx, axis=-1
+            )
+            best_i, best_d = merge_topk(best_i, best_d, cand_ids, -neg, k)
+            blk_x = jax.lax.ppermute(blk_x, axis, perm)
+            blk_ids = jax.lax.ppermute(blk_ids, axis, perm)
+            return (blk_x, blk_ids, best_i, best_d), None
+
+        init = (
+            x,
+            gids,
+            jnp.full((nloc, k), -1, jnp.int32),
+            jnp.full((nloc, k), jnp.inf, jnp.float32),
+        )
+        (_, _, best_i, best_d), _ = jax.lax.scan(step, init, None, length=size)
+        return best_i, best_d
+
+    row = P((axis,))
+    fn = jax.shard_map(
+        ring_knn, mesh=mesh, in_specs=(row, row), out_specs=(row, row),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def build_sharded_index_host(
+    x: np.ndarray,
+    intervals: np.ndarray,
+    n_shards: int,
+    cfg,
+    seed: int = 0,
+):
+    """Host-side helper: partition rows round-robin and build one UG per
+    shard (heredity ⇒ per-shard graphs are sound).  Returns per-shard arrays
+    padded to a common width, ready for :func:`shard_index`."""
+    from repro.core.build import build_ug
+
+    n = x.shape[0]
+    per = (n + n_shards - 1) // n_shards
+    xs, its, nbs, sts, gid = [], [], [], [], []
+    max_m = 1
+    shards = []
+    for s in range(n_shards):
+        rows = np.arange(s, n, n_shards)[:per]
+        g = build_ug(
+            jax.random.key(seed + s), jnp.asarray(x[rows]), jnp.asarray(intervals[rows]), cfg
+        )
+        shards.append((rows, g))
+        max_m = max(max_m, g.nbrs.shape[1])
+    for rows, g in shards:
+        m = g.nbrs.shape[1]
+        nb = np.full((per, max_m), -1, np.int32)
+        st = np.zeros((per, max_m), np.uint8)
+        nloc = rows.shape[0]
+        nb[:nloc, :m] = np.asarray(g.nbrs)
+        st[:nloc, :m] = np.asarray(g.status)
+        xpad = np.zeros((per, x.shape[1]), x.dtype)
+        xpad[:nloc] = x[rows]
+        ipad = np.zeros((per, 2), intervals.dtype)
+        # Padded rows get inverted intervals so no predicate ever matches.
+        ipad[:, 0], ipad[:, 1] = 2.0, -2.0
+        ipad[:nloc] = intervals[rows]
+        gpad = np.full((per,), -1, np.int32)
+        gpad[:nloc] = rows
+        xs.append(xpad); its.append(ipad); nbs.append(nb); sts.append(st); gid.append(gpad)
+    cat = lambda arrs: np.concatenate(arrs, axis=0)
+    return cat(xs), cat(its), cat(nbs), cat(sts), cat(gid)

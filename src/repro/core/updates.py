@@ -1,0 +1,119 @@
+"""Incremental index maintenance: insert new objects into a built UG.
+
+The paper's Hi-PNG-style partitioned baselines "complicate updates and
+maintenance" (§2.3); the unified graph makes insertion local: a new object
+needs (1) candidates — its spatial KNN within the existing corpus plus
+interval-order neighbors, exactly Alg. 1 restricted to one row; (2) one
+``UnifiedPrune`` pass for its own out-edges; (3) reverse-edge offers — the
+new node is appended to its neighbors' lists and each touched node gets a
+bounded local re-prune (their candidate pool ∪ {new}), which preserves the
+per-semantics degree budgets.
+
+Entry arrays are rebuilt lazily (O(n log n), amortized over a batch of
+inserts).  This matches the paper's forward-looking maintenance story
+without a full rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import UGConfig
+from repro.core.candidates import merge_topk
+from repro.core.entry import build_entry_index
+from repro.core.exact import DenseGraph
+from repro.core.index import UGIndex
+from repro.core.prune import squared_dist, unified_prune
+
+
+def insert(index: UGIndex, new_x, new_intervals) -> UGIndex:
+    """Insert a batch of objects; returns a new UGIndex (functional update)."""
+    new_x = jnp.atleast_2d(jnp.asarray(new_x))
+    new_intervals = jnp.atleast_2d(jnp.asarray(new_intervals))
+    b = new_x.shape[0]
+    n_old = index.n
+    cfg = index.config
+
+    x_all = jnp.concatenate([index.x, new_x])
+    iv_all = jnp.concatenate([index.intervals, new_intervals])
+    new_ids = jnp.arange(n_old, n_old + b, dtype=jnp.int32)
+
+    # ---- (1) candidates: spatial KNN over the old corpus + the four
+    # interval-derived sort orders of Alg. 1 ({l, r, mid, len})
+    d = squared_dist(new_x, index.x)                      # (b, n_old)
+    k_spa = min(cfg.ef_spatial, n_old)
+    _, spa = jax.lax.top_k(-d, k_spa)                     # (b, k_spa)
+    l_o, r_o = index.intervals[:, 0], index.intervals[:, 1]
+    keys_old = [l_o, r_o, (l_o + r_o) * 0.5, r_o - l_o]
+    l_n, r_n = new_intervals[:, 0], new_intervals[:, 1]
+    keys_new = [l_n, r_n, (l_n + r_n) * 0.5, r_n - l_n]
+    w = max(cfg.ef_attribute // 8, 1)
+    offs = jnp.arange(-w, w + 1)
+    attrs = []
+    for k_old, k_new in zip(keys_old, keys_new):
+        order = jnp.argsort(k_old)
+        pos = jnp.searchsorted(k_old[order], k_new)
+        attr_pos = jnp.clip(pos[:, None] + offs[None, :], 0, n_old - 1)
+        attrs.append(order[attr_pos].astype(jnp.int32))
+    cand = jnp.concatenate([spa.astype(jnp.int32)] + attrs, axis=1)
+
+    # ---- (2) prune the new nodes' out-edges
+    res = unified_prune(
+        new_ids, cand, x_all, iv_all,
+        m_if=cfg.max_edges_if, m_is=cfg.max_edges_is,
+        alpha=cfg.alpha, unified=cfg.unified,
+    )
+    m_cols = index.graph.nbrs.shape[1]
+    keep = min(m_cols, res.order.shape[1])
+    score = jnp.where(res.status > 0, res.dist, jnp.inf)
+    sel = jnp.argsort(score, axis=1)[:, :keep]
+    new_nbrs = jnp.where(
+        jnp.isfinite(jnp.take_along_axis(score, sel, axis=1)),
+        jnp.take_along_axis(res.order, sel, axis=1), -1,
+    )
+    new_stat = jnp.where(
+        new_nbrs >= 0, jnp.take_along_axis(res.status, sel, axis=1), 0
+    )
+    pad = m_cols - keep
+    if pad:
+        new_nbrs = jnp.pad(new_nbrs, ((0, 0), (0, pad)), constant_values=-1)
+        new_stat = jnp.pad(new_stat, ((0, 0), (0, pad)))
+
+    nbrs = jnp.concatenate([index.graph.nbrs, new_nbrs])
+    stat = jnp.concatenate([index.graph.status, new_stat])
+
+    # ---- (3) reverse offers: re-prune nodes the new objects point to
+    touched = np.unique(np.asarray(new_nbrs[new_nbrs >= 0]))
+    if touched.size:
+        t_ids = jnp.asarray(touched, jnp.int32)
+        # pool = current neighbors ∪ all new ids (bounded)
+        pool = jnp.concatenate(
+            [nbrs[t_ids], jnp.broadcast_to(new_ids, (t_ids.shape[0], b))], axis=1
+        )
+        r2 = unified_prune(
+            t_ids, pool, x_all, iv_all,
+            m_if=cfg.max_edges_if, m_is=cfg.max_edges_is,
+            alpha=cfg.alpha, unified=cfg.unified,
+        )
+        score2 = jnp.where(r2.status > 0, r2.dist, jnp.inf)
+        sel2 = jnp.argsort(score2, axis=1)[:, :m_cols]
+        nb2 = jnp.where(
+            jnp.isfinite(jnp.take_along_axis(score2, sel2, axis=1)),
+            jnp.take_along_axis(r2.order, sel2, axis=1), -1,
+        )
+        st2 = jnp.where(nb2 >= 0, jnp.take_along_axis(r2.status, sel2, axis=1), 0)
+        if nb2.shape[1] < m_cols:
+            extra = m_cols - nb2.shape[1]
+            nb2 = jnp.pad(nb2, ((0, 0), (0, extra)), constant_values=-1)
+            st2 = jnp.pad(st2, ((0, 0), (0, extra)))
+        nbrs = nbrs.at[t_ids].set(nb2[:, :m_cols])
+        stat = stat.at[t_ids].set(st2[:, :m_cols])
+
+    graph = DenseGraph(nbrs, stat)
+    return dataclasses.replace(
+        index, x=x_all, intervals=iv_all, graph=graph,
+        entry=build_entry_index(iv_all),
+    )

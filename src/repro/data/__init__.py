@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline (LM batches + index corpora)."""
+from repro.data.synthetic import (CorpusConfig, LMDataConfig, host_slice,
+                                  lm_batch, lm_batches, make_corpus, make_queries)

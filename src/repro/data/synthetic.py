@@ -1,0 +1,134 @@
+"""Deterministic synthetic data pipeline.
+
+Everything is a pure function of (seed, step, shard) so restarts resume
+byte-identically from the checkpointed cursor (DESIGN.md §4 fault tolerance):
+no host-side RNG state survives between steps.
+
+Two product lines:
+
+* **LM batches** — token/label/mask pytrees at any (batch, seq) shape, with a
+  Zipf-ish marginal so losses are non-degenerate;
+* **Vector corpora** — Gaussian-mixture embeddings + interval attributes
+  (the paper's uniform interval model §3.2 plus the short/long/mixed query
+  workloads of Exp-3) for every index benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token stream
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab: int
+    batch: int            # global batch
+    seq: int
+    seed: int = 0
+
+
+def lm_batch(cfg: LMDataConfig, step: int, *, frames_dim: int = 0, frames_len: int = 0):
+    """Global LM batch for one step (deterministic in (seed, step))."""
+    key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+    k_tok, k_fr = jax.random.split(key)
+    # Zipf-ish marginal: square a uniform to skew towards low ids.
+    u = jax.random.uniform(k_tok, (cfg.batch, cfg.seq + 1))
+    toks = (u * u * (cfg.vocab - 1)).astype(jnp.int32)
+    batch = {
+        "tokens": toks[:, :-1],
+        "labels": toks[:, 1:],
+        "mask": jnp.ones((cfg.batch, cfg.seq), jnp.float32),
+    }
+    if frames_dim:
+        batch["frames"] = jax.random.normal(
+            k_fr, (cfg.batch, frames_len, frames_dim), jnp.float32
+        )
+    return batch
+
+
+def lm_batches(cfg: LMDataConfig, start_step: int = 0, **kw) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield lm_batch(cfg, step, **kw)
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# Vector + interval corpora (paper benchmarks)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    n: int
+    dim: int
+    n_clusters: int = 32
+    cluster_std: float = 0.35
+    seed: int = 0
+    interval_mode: str = "uniform"   # uniform | point (RFANN datasets)
+
+
+def make_corpus(cfg: CorpusConfig):
+    """Returns (x (n, d) f32, intervals (n, 2) f32 in [0, 1])."""
+    key = jax.random.key(cfg.seed)
+    kc, ka, ki = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (cfg.n_clusters, cfg.dim))
+    assign = jax.random.randint(ka, (cfg.n,), 0, cfg.n_clusters)
+    noise = jax.random.normal(ki, (cfg.n, cfg.dim)) * cfg.cluster_std
+    x = centers[assign] + noise
+
+    kiv = jax.random.fold_in(key, 7)
+    if cfg.interval_mode == "point":
+        a = jax.random.uniform(kiv, (cfg.n, 1))
+        intervals = jnp.concatenate([a, a], axis=1)
+    else:
+        pts = jax.random.uniform(kiv, (cfg.n, 2))
+        intervals = jnp.sort(pts, axis=1)
+    return x.astype(jnp.float32), intervals.astype(jnp.float32)
+
+
+def make_queries(
+    cfg: CorpusConfig,
+    nq: int,
+    *,
+    workload: str = "uniform",      # uniform | short | long | mixed | point
+    seed: int = 100,
+):
+    """Query vectors + intervals per the paper's workloads (Exp-1/Exp-3).
+
+    short: selectivity < 5%  (narrow windows); long: > 20% (wide windows);
+    mixed: half and half; point: degenerate [t, t] (RSANN).
+    """
+    key = jax.random.key(seed)
+    kq, kw, kc2, ka2 = jax.random.split(key, 4)
+    centers = jax.random.normal(kc2, (cfg.n_clusters, cfg.dim))
+    assign = jax.random.randint(ka2, (nq,), 0, cfg.n_clusters)
+    qv = centers[assign] + jax.random.normal(kq, (nq, cfg.dim)) * cfg.cluster_std
+
+    c = jax.random.uniform(kw, (nq, 1))
+    if workload == "point":
+        qi = jnp.concatenate([c, c], axis=1)
+    else:
+        if workload == "short":
+            half = jnp.full((nq, 1), 0.10)
+        elif workload == "long":
+            half = jnp.full((nq, 1), 0.35)
+        elif workload == "mixed":
+            half = jnp.where(jnp.arange(nq)[:, None] % 2 == 0, 0.10, 0.35)
+        else:  # uniform widths
+            half = jax.random.uniform(jax.random.fold_in(kw, 1), (nq, 1), minval=0.1, maxval=0.45)
+        qi = jnp.concatenate([jnp.maximum(c - half, 0.0), jnp.minimum(c + half, 1.0)], axis=1)
+    return qv.astype(jnp.float32), qi.astype(jnp.float32)
+
+
+def host_slice(global_batch: dict, host_id: int, n_hosts: int) -> dict:
+    """Per-host slice of a global batch (data-loader sharding on real pods)."""
+    def sl(a):
+        per = a.shape[0] // n_hosts
+        return a[host_id * per : (host_id + 1) * per]
+
+    return jax.tree.map(sl, global_batch)

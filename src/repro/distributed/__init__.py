@@ -1,0 +1,6 @@
+"""Distribution utilities: compression, ring collectives."""
+from repro.distributed.compression import (EFState, compressed_psum,
+                                           compression_ratio, init_ef)
+from repro.distributed.collectives import (ring_all_gather,
+                                           ring_reduce_scatter,
+                                           ring_streamed_map)

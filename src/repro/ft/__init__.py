@@ -1,0 +1,3 @@
+"""Fault tolerance: straggler detection, elastic rescale, resume."""
+from repro.ft.elastic import RescalePlan, plan_rescale, resume
+from repro.ft.straggler import FleetMonitor, StepTimer, StragglerConfig

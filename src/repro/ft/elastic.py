@@ -1,0 +1,78 @@
+"""Elastic rescaling: re-plan the mesh when devices join/leave, and restore
+the latest checkpoint re-sharded onto the new mesh.
+
+The checkpoint format stores full logical arrays (ckpt/store.py), so the
+restore path is mesh-agnostic — this module only decides the new mesh shape
+and drives the re-sharded restore + deterministic data-cursor resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.ckpt import store
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    dropped_pods: int = 0
+
+
+def plan_rescale(
+    n_devices: int,
+    *,
+    model_parallel: int,
+    pods: int = 1,
+    axis_names: tuple[str, ...] = ("pod", "data", "model"),
+) -> RescalePlan:
+    """Choose the largest (pod, data, model) mesh that fits ``n_devices``.
+
+    Model parallelism is preserved (changing TP degree would invalidate the
+    parameter layout assumptions of attention-head sharding); pods shrink
+    first, then the data axis — matching how real incidents lose capacity.
+    """
+    if n_devices % model_parallel:
+        raise ValueError(
+            f"{n_devices} devices not divisible by model_parallel={model_parallel}"
+        )
+    replicas = n_devices // model_parallel
+    use_pods = pods
+    while use_pods > 1 and replicas % use_pods:
+        use_pods -= 1
+    data = replicas // use_pods
+    if use_pods > 1:
+        return RescalePlan((use_pods, data, model_parallel), axis_names, pods - use_pods)
+    return RescalePlan((data, model_parallel), axis_names[1:], pods - 1 if pods > 1 else 0)
+
+
+def resume(
+    ckpt_dir,
+    model,
+    opt_template,
+    mesh,
+    *,
+    step: int | None = None,
+):
+    """Restore latest checkpoint re-sharded onto ``mesh``.
+
+    Returns (params, opt_state, meta) with leaves placed under the new mesh's
+    NamedShardings; ``meta["data_cursor"]`` is the deterministic resume point
+    for the synthetic pipeline (data is a pure function of (seed, step)).
+    """
+    pshard = model.shardings(mesh)
+    oshard = None
+    if opt_template is not None:
+        from repro.train import optim
+
+        oshard = optim.AdamWState(None, pshard, pshard)
+    return store.restore(
+        ckpt_dir,
+        step,
+        params_template=model.shapes(),
+        opt_template=opt_template,
+        param_shardings=pshard,
+        opt_shardings=oshard,
+    )

@@ -1,0 +1,92 @@
+"""Straggler detection & mitigation hooks (host-side, DESIGN.md §4).
+
+On a real pod every worker reports per-step wall time; a straggler is a
+worker whose recent mean exceeds the fleet median by ``z_thresh`` robust
+z-scores.  Mitigations (returned as recommendations; the launcher acts):
+
+* ``"recompile_spare"`` — swap in a hot spare and re-shard (elastic path),
+* ``"skip_collective_timeout"`` — raise collective timeout for transient
+  network jitter,
+* ``"checkpoint_now"`` — preemptive checkpoint when degradation is trending.
+
+This module is deliberately pure-python (no jax) so it can run in the
+launcher process next to the training loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Deque
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 32          # ring buffer of recent step times
+    z_thresh: float = 4.0     # robust z-score to flag
+    trend_thresh: float = 1.5 # sustained slowdown factor → checkpoint advice
+
+
+class StepTimer:
+    """Per-worker step-time ring buffer with robust outlier detection."""
+
+    def __init__(self, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.times: Deque[float] = deque(maxlen=cfg.window)
+        self.baseline: float | None = None
+
+    def record(self, seconds: float) -> None:
+        self.times.append(seconds)
+        if self.baseline is None and len(self.times) >= 8:
+            self.baseline = _median(list(self.times))
+
+    def is_straggling(self) -> bool:
+        if len(self.times) < 8 or self.baseline is None:
+            return False
+        recent = list(self.times)[-8:]
+        med = _median(recent)
+        mad = _median([abs(t - med) for t in recent]) + 1e-9
+        z = (med - self.baseline) / (1.4826 * mad)
+        return z > self.cfg.z_thresh
+
+    def recommendation(self) -> str | None:
+        if not self.times or self.baseline is None:
+            return None
+        recent_mean = sum(self.times) / len(self.times)
+        if recent_mean > self.cfg.trend_thresh * self.baseline:
+            return "checkpoint_now"
+        if self.is_straggling():
+            return "recompile_spare"
+        return None
+
+
+class FleetMonitor:
+    """Aggregates per-worker timers (single-process stand-in for the real
+    cross-host heartbeat service)."""
+
+    def __init__(self, n_workers: int, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.timers = [StepTimer(cfg) for _ in range(n_workers)]
+
+    def record(self, worker: int, seconds: float) -> None:
+        self.timers[worker].record(seconds)
+
+    def stragglers(self) -> list[int]:
+        meds = [
+            _median(list(t.times)) if t.times else math.inf for t in self.timers
+        ]
+        fleet_med = _median([m for m in meds if math.isfinite(m)] or [0.0])
+        mad = _median([abs(m - fleet_med) for m in meds if math.isfinite(m)] or [0.0]) + 1e-9
+        out = []
+        for i, m in enumerate(meds):
+            if math.isfinite(m) and (m - fleet_med) / (1.4826 * mad) > self.cfg.z_thresh:
+                out.append(i)
+        return out
+
+
+def _median(xs: list[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    if n == 0:
+        return 0.0
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (distance scans).
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jitted dispatching
+wrapper in ``ops.py`` (interpret mode on CPU, Mosaic on TPU).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

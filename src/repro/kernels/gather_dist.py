@@ -1,0 +1,61 @@
+"""Scalar-prefetch gather + distance Pallas TPU kernel (beam expansion).
+
+The inner loop of Alg. 4 gathers the M neighbor rows of the expanded node and
+scores them against the query.  On TPU the idiomatic pattern is a
+``PrefetchScalarGridSpec``: the neighbor indices are scalar-prefetched, and
+the corpus BlockSpec's ``index_map`` *reads them* to choose which (1, d) row
+to DMA from HBM for each grid step — the gather happens in the pipeline, not
+in the kernel body, so row fetches overlap with the previous step's compute.
+
+Grid: ``(B, M)`` — one (query, neighbor) pair per step; the query row block
+is reused across the M inner steps (same block index → no re-fetch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.util import compiler_params
+
+
+def _kernel(idx_ref, q_ref, x_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)    # (1, d)
+    x = x_ref[...].astype(jnp.float32)    # (1, d)
+    diff = q - x
+    o_ref[0, 0] = jnp.sum(diff * diff)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_sq_dist(
+    x: jnp.ndarray,     # (n, d) corpus (stays in HBM; rows DMA'd on demand)
+    idx: jnp.ndarray,   # (B, M) int32 neighbor ids (-1 = padding)
+    q: jnp.ndarray,     # (B, d) queries
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Squared L2 between q[b] and x[idx[b, m]]; +inf where idx < 0."""
+    B, M = idx.shape
+    d = x.shape[1]
+    safe = jnp.clip(idx, 0, x.shape[0] - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, m, idx_ref: (b, 0)),
+            pl.BlockSpec((1, d), lambda b, m, idx_ref: (idx_ref[b, m], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, m, idx_ref: (b, m)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
+        compiler_params=compiler_params(("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(safe, q, x)
+    return jnp.where(idx >= 0, out, jnp.inf)

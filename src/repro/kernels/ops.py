@@ -1,0 +1,38 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Backend dispatch: on CPU (this container) kernels run in ``interpret=True``
+mode — the body executes in Python with identical semantics; on TPU they
+compile through Mosaic.  Callers never pass ``interpret`` themselves.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import fused_scan, gather_dist, l2dist
+from repro.kernels.util import on_cpu
+
+
+def pairwise_sq_dist(q: jnp.ndarray, x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Blocked (nq, nx) squared-L2 distance matrix."""
+    return l2dist.pairwise_sq_dist(q, x, interpret=on_cpu(), **kw)
+
+
+def filtered_topk(
+    q: jnp.ndarray,
+    x: jnp.ndarray,
+    obj_int: jnp.ndarray,
+    q_int: jnp.ndarray,
+    *,
+    is_filter: bool,
+    k: int,
+    **kw,
+):
+    """Fused predicate + distance + exact top-k in one corpus pass."""
+    return fused_scan.filtered_topk(
+        q, x, obj_int, q_int, is_filter=is_filter, k=k, interpret=on_cpu(), **kw
+    )
+
+
+def gather_sq_dist(x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Beam-expansion scoring via scalar-prefetch row gather."""
+    return gather_dist.gather_sq_dist(x, idx, q, interpret=on_cpu())

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantics the kernels must reproduce bit-for-bit (up to fp32
+accumulation order); kernel tests sweep shapes/dtypes and assert_allclose
+against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dist(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(nq, d) × (nx, d) -> (nq, nx) squared L2, fp32 accumulation."""
+    q32 = q.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    qn = jnp.sum(q32 * q32, axis=-1)
+    xn = jnp.sum(x32 * x32, axis=-1)
+    ip = q32 @ x32.T
+    return jnp.maximum(qn[:, None] + xn[None, :] - 2.0 * ip, 0.0)
+
+
+def filtered_topk(
+    q: jnp.ndarray,          # (nq, d)
+    x: jnp.ndarray,          # (nx, d)
+    obj_int: jnp.ndarray,    # (nx, 2)
+    q_int: jnp.ndarray,      # (nq, 2)
+    *,
+    is_filter: bool,         # True: IF/RF (obj ⊆ query); False: IS/RS
+    k: int,
+):
+    """Fused predicate-masked exact top-k (the pre-filter scan semantics)."""
+    d = pairwise_sq_dist(q, x)
+    if is_filter:
+        ok = (obj_int[None, :, 0] >= q_int[:, None, 0]) & (
+            obj_int[None, :, 1] <= q_int[:, None, 1]
+        )
+    else:
+        ok = (obj_int[None, :, 0] <= q_int[:, None, 0]) & (
+            obj_int[None, :, 1] >= q_int[:, None, 1]
+        )
+    d = jnp.where(ok, d, jnp.inf)
+    neg, idx = jax.lax.top_k(-d, k)
+    vals = -neg
+    idx = jnp.where(jnp.isfinite(vals), idx, -1)
+    return vals, idx.astype(jnp.int32)
+
+
+def gather_sq_dist(x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Beam-expansion scoring: x (n, d), idx (B, M), q (B, d) -> (B, M).
+
+    Negative indices are padding; their distance is +inf.
+    """
+    n = x.shape[0]
+    rows = x[jnp.clip(idx, 0, n - 1)].astype(jnp.float32)  # (B, M, d)
+    diff = rows - q[:, None, :].astype(jnp.float32)
+    d = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(idx >= 0, d, jnp.inf)

@@ -1,0 +1,31 @@
+"""Shared Pallas kernel utilities (padding, compiler params, backend probe)."""
+from __future__ import annotations
+
+import jax
+
+
+def pad_to(n: int, m: int) -> int:
+    """Round ``n`` up to a multiple of ``m`` (at least ``m``)."""
+    return max(((n + m - 1) // m) * m, m)
+
+
+def compiler_params(dimension_semantics: tuple[str, ...]):
+    """TPU Mosaic compiler params, version-tolerant across jax releases."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            try:
+                return cls(dimension_semantics=dimension_semantics)
+            except TypeError:
+                continue
+    return None
+
+
+def on_cpu() -> bool:
+    """True when running on the CPU backend → kernels use interpret mode.
+
+    TPU is the *target*; interpret mode executes the kernel body in Python
+    for correctness validation (per-kernel tests sweep shapes/dtypes)."""
+    return jax.default_backend() == "cpu"

@@ -1,0 +1,349 @@
+"""HLO analysis for the roofline: loop-aware collective-byte accounting.
+
+``cost_analysis()`` gives FLOPs and memory bytes but not collective traffic,
+so we parse the post-SPMD per-device HLO (``compiled.as_text()``):
+
+1. build a symbol table of every op's result shape (bytes);
+2. find every collective op (all-reduce, all-gather, reduce-scatter,
+   all-to-all, collective-permute) and sum its *operand* bytes;
+3. weight ops inside ``while`` bodies by the loop trip count, recovered from
+   the loop condition's comparison constant (scan-over-layers runs its body
+   n_layers times — static summing would undercount 94× on qwen3-moe).
+
+The same trip-count machinery cross-checks cost_analysis FLOPs (XLA's
+HloCostAnalysis also visits while bodies once on some backends; the
+``flops_scale_hint`` lets the roofline reconcile).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# computation header: "%name (args...) -> type {" (args may nest parens)
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-$]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)?.*condition=%?([\w.\-]+).*body=%?([\w.\-]+)", re.S
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type signature."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    sig: str
+    opcode: str
+    line: str
+
+
+def parse_computations(hlo: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    current = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m and line.endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        d = _DEF_RE.match(line)
+        if d:
+            name = d.group(1).lstrip("%")
+            comps[current].append(Op(name, d.group(2), d.group(3), line))
+    return comps
+
+
+def _symbol_table(comps: dict[str, list[Op]]) -> dict[str, int]:
+    table: dict[str, int] = {}
+    for ops in comps.values():
+        for op in ops:
+            table[op.name] = _shape_bytes(op.sig)
+    return table
+
+
+def _trip_count(cond_ops: list[Op]) -> int:
+    """Recover the loop bound from the condition computation's constants.
+
+    XLA often hides the compare inside a kLoop fusion; the bound constant is
+    still defined (or literal) in the condition computation, so we take the
+    largest integer constant found there — induction starts/strides are 0/1.
+    """
+    consts = []
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = _CONST_RE.search(op.line)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts, default=1)
+
+
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _operand_bytes(op: Op, table: dict[str, int]) -> int:
+    """Sum the operand sizes referenced inside the op's parens."""
+    m = _OPERAND_RE.search(op.line.split(op.opcode, 1)[-1])
+    if not m:
+        return 0
+    total = 0
+    for tok in m.group(1).split(","):
+        tok = tok.strip().lstrip("%")
+        tok = tok.split(" ")[-1].lstrip("%")  # "bf16[8,16] %name" form
+        if tok in table:
+            total += table[tok]
+    if total == 0:
+        # operand names not resolvable — fall back to result size
+        total = _shape_bytes(op.sig)
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_type: dict[str, int]
+    by_computation: dict[str, int]
+    trip_counts: dict[str, int]
+
+    def fmt(self) -> str:
+        rows = [f"  total collective operand bytes/device: {self.total_bytes:,}"]
+        for k, v in sorted(self.by_type.items(), key=lambda kv: -kv[1]):
+            rows.append(f"    {k:20s} {v:,}")
+        return "\n".join(rows)
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    comps = parse_computations(hlo)
+    table = _symbol_table(comps)
+
+    # map body computation -> trip count (via the while ops that call it)
+    trip: dict[str, int] = defaultdict(lambda: 1)
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode == "while":
+                m = _WHILE_RE.search(op.line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    if cond in comps:
+                        trip[body] = _trip_count(comps[cond])
+
+    # weight of each computation = product of enclosing loop trips; we
+    # approximate nesting by iterating to fixpoint over call edges
+    weight: dict[str, int] = {name: 1 for name in comps}
+    call_re = re.compile(r"(?:body|to_apply|condition)=%?([\w.\-]+)")
+    for _ in range(4):  # enough for realistic nesting depth
+        new = dict(weight)
+        for name, ops in comps.items():
+            for op in ops:
+                for callee in call_re.findall(op.line):
+                    if callee in comps:
+                        t = trip[callee] if op.opcode == "while" and callee != name else 1
+                        w = weight[name] * (t if t > 1 else 1)
+                        if w > new.get(callee, 1):
+                            new[callee] = w
+        weight = new
+
+    by_type: dict[str, int] = defaultdict(int)
+    by_comp: dict[str, int] = defaultdict(int)
+    for name, ops in comps.items():
+        for op in ops:
+            if any(op.opcode.startswith(c) for c in COLLECTIVE_OPS):
+                b = _operand_bytes(op, table) * weight.get(name, 1)
+                key = op.opcode
+                for c in COLLECTIVE_OPS:
+                    if op.opcode.startswith(c):
+                        key = c
+                        break
+                by_type[key] += b
+                by_comp[name] += b
+    return CollectiveStats(
+        sum(by_type.values()), dict(by_type), dict(by_comp),
+        {k: v for k, v in trip.items() if v > 1},
+    )
+
+
+def loop_weighted_flops_hint(hlo: str) -> dict[str, int]:
+    """Trip counts of all while loops (for reconciling cost_analysis FLOPs)."""
+    comps = parse_computations(hlo)
+    out = {}
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode == "while":
+                m = _WHILE_RE.search(op.line)
+                if m and m.group(1) in comps:
+                    out[m.group(2)] = _trip_count(comps[m.group(1)])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loop-weighted analytic FLOPs and HBM bytes
+# ---------------------------------------------------------------------------
+_CALL_RE = re.compile(r"(body|condition|calls|to_apply)=%?([\w.\-$]+)")
+_DIMS_RE = re.compile(r"(lhs|rhs)_contracting_dims=\{([\d,]*)\}")
+_NOBYTES_OPS = {
+    "get-tuple-element", "parameter", "constant", "bitcast", "tuple",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+
+# Ops that touch HBM on TPU.  The CPU backend leaves many layout/elementwise
+# ops unfused that Mosaic/XLA-TPU would fuse into neighbors; counting every
+# top-level op's operands+results would double- or triple-count each value.
+_HBM_OPS = {
+    "dot", "convolution", "fusion", "custom-call", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+    "sort", "select-and-scatter", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute", "rng",
+    "rng-bit-generator", "cholesky", "triangular-solve", "fft",
+}
+
+
+def _computation_weights(comps: dict[str, list[Op]]):
+    """weight[c] = product of enclosing while trip counts (call-graph fixpoint)."""
+    trips: dict[str, int] = {}
+    edges: list[tuple[str, str, int]] = []  # (caller, callee, multiplier)
+    for name, ops in comps.items():
+        for op in ops:
+            trip = 1
+            if op.opcode == "while":
+                m = _WHILE_RE.search(op.line)
+                if m and m.group(1) in comps:
+                    trip = _trip_count(comps[m.group(1)])
+                    trips[m.group(2)] = trip
+            for kind, callee in _CALL_RE.findall(op.line):
+                if callee in comps:
+                    mult = trip if (op.opcode == "while" and kind == "body") else 1
+                    edges.append((name, callee, mult))
+    weight = {name: 0 for name in comps}
+    for entry in comps:
+        if entry.startswith("main") or ".main" in entry or entry == "entry":
+            weight[entry] = 1
+    if not any(weight.values()):
+        # fall back: first computation named like ENTRY
+        first = next(iter(comps))
+        weight[first] = 1
+    for _ in range(8):
+        changed = False
+        for caller, callee, mult in edges:
+            w = weight.get(caller, 0) * max(mult, 1)
+            if w > weight.get(callee, 0):
+                weight[callee] = w
+                changed = True
+        if not changed:
+            break
+    return weight, trips
+
+
+def _dot_flops(op: Op, table_shape: dict[str, tuple[str, tuple[int, ...]]]) -> int:
+    """2 × |result| × K for a dot op (K from lhs contracting dims)."""
+    res = _SHAPE_RE.search(op.sig)
+    if not res:
+        return 0
+    out_elems = 1
+    if res.group(2):
+        for d in res.group(2).split(","):
+            out_elems *= int(d)
+    m = _OPERAND_RE.search(op.line.split(op.opcode, 1)[-1])
+    lhs_name = None
+    if m:
+        toks = [t.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                for t in m.group(1).split(",")]
+        lhs_name = toks[0] if toks else None
+    dims = dict(_DIMS_RE.findall(op.line))
+    k = 1
+    if lhs_name and lhs_name in table_shape and "lhs" in dims and dims["lhs"]:
+        _, shape = table_shape[lhs_name]
+        for d in dims["lhs"].split(","):
+            di = int(d)
+            if di < len(shape):
+                k *= shape[di]
+    return 2 * out_elems * k
+
+
+def _shape_of(sig: str) -> tuple[str, tuple[int, ...]]:
+    m = _SHAPE_RE.search(sig)
+    if not m:
+        return ("", ())
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+    return (m.group(1), dims)
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float            # loop-weighted dot/conv FLOPs per device
+    hbm_bytes: float        # loop-weighted top-level operand+result bytes
+    collectives: CollectiveStats
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    """Loop-weighted FLOPs / HBM bytes / collective bytes for one module."""
+    comps = parse_computations(hlo)
+    table = _symbol_table(comps)
+    shape_table: dict[str, tuple[str, tuple[int, ...]]] = {}
+    for ops in comps.values():
+        for op in ops:
+            shape_table[op.name] = _shape_of(op.sig)
+    weight, trips = _computation_weights(comps)
+
+    flops = 0.0
+    hbm = 0.0
+    by_type: dict[str, int] = defaultdict(int)
+    for name, ops in comps.items():
+        w = weight.get(name, 0)
+        if w <= 0:
+            continue
+        for op in ops:
+            if op.opcode in ("dot", "convolution"):
+                flops += w * _dot_flops(op, shape_table)
+            if op.opcode in _NOBYTES_OPS:
+                continue
+            # top-level data movement: operands + result, restricted to ops
+            # that touch HBM on TPU (fusion internals and fuse-away layout /
+            # elementwise ops excluded — see _HBM_OPS note)
+            if (
+                op.opcode in _HBM_OPS
+                and not name.endswith("_computation")
+                and "fused" not in name
+            ):
+                hbm += w * (_operand_bytes(op, table) + _shape_bytes(op.sig))
+            if any(op.opcode.startswith(c) for c in COLLECTIVE_OPS):
+                b = _operand_bytes(op, table) * w
+                for c in COLLECTIVE_OPS:
+                    if op.opcode.startswith(c):
+                        by_type[c] += b
+                        break
+    coll = CollectiveStats(sum(by_type.values()), dict(by_type), {}, trips)
+    return HloStats(flops, hbm, coll)

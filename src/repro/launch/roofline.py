@@ -1,0 +1,125 @@
+"""Roofline analysis (deliverable g): three terms per dry-run record.
+
+    compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes   / (chips × 819e9  B/s HBM)
+    collective = coll_bytes  / (chips × 50e9   B/s ICI per link)
+
+HLO figures from ``cost_analysis()`` are per-device for the SPMD-partitioned
+module, so ``chips`` divides only the hardware constants' aggregate — i.e.
+terms are simply per-device quantities over per-chip rates.  MODEL_FLOPS is
+6·N·D (dense) or 6·N_active·D (MoE) per the harness definition; its ratio to
+(HLO_FLOPs × chips) flags remat/redundancy waste.
+
+Reads the JSONL written by ``repro.launch.dryrun`` and emits the §Roofline
+table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+PEAK_FLOPS = 197e12     # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+_CHIPS = {"single": 256, "multi": 512}
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    """6·N(_active)·D per the harness definition (D = tokens processed)."""
+    from repro.configs.registry import ARCHS, SHAPES
+
+    if arch not in ARCHS:
+        return 0.0
+    cfg = ARCHS[arch].config
+    sh = SHAPES[shape["shape"]] if isinstance(shape, dict) else SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_active * tokens        # forward only
+    # decode: one token per request
+    return 2.0 * n_active * sh.global_batch
+
+
+def analyze(rec: dict) -> dict:
+    chips = _CHIPS.get(rec.get("mesh", "single"), 256)
+    flops_dev = rec.get("flops", 0.0)
+    bytes_dev = rec.get("bytes_accessed", 0.0)
+    coll_dev = rec.get("collective_bytes", 0)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec.get("arch", ""), rec)
+    hlo_total = flops_dev * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful work over what the dominant term's time buys
+    step_time = bound
+    achievable = mf / (chips * PEAK_FLOPS)
+    frac = achievable / step_time if step_time > 0 else 0.0
+    return {
+        **{k: rec.get(k) for k in ("arch", "shape", "mesh", "ok", "skipped")},
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+    }
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (
+        f"{'arch':26s} {'shape':12s} {'mesh':6s} {'compute(s)':>11s} "
+        f"{'memory(s)':>11s} {'coll(s)':>11s} {'bound':>10s} "
+        f"{'useful':>7s} {'roofline':>9s}"
+    )
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:6s} "
+                       f"{'— skipped: sub-quadratic attention required —':>62s}")
+            continue
+        if not r.get("ok", True):
+            out.append(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:6s} FAILED")
+            continue
+        out.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['t_compute_s']:11.4f} {r['t_memory_s']:11.4f} "
+            f"{r['t_collective_s']:11.4f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:9.3f}"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("jsonl", help="dryrun JSONL file")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    rows = []
+    seen = {}
+    for line in pathlib.Path(args.jsonl).read_text().splitlines():
+        rec = json.loads(line)
+        seen[(rec.get("arch"), rec.get("shape"), rec.get("mesh"))] = rec
+    for rec in seen.values():
+        rows.append(analyze(rec))
+    print(fmt_table(rows))
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(json.dumps(rows, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

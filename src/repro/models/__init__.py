@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures as one configurable family set."""
+from repro.models.api import Model, get_model
+from repro.models.common import ModelConfig, init_params, param_shardings, param_specs
+
+__all__ = ["Model", "get_model", "ModelConfig", "init_params",
+           "param_shardings", "param_specs"]

@@ -1,0 +1,98 @@
+"""Model API: one uniform surface over the four architecture families.
+
+``Model`` bundles the family-dispatched functions every launcher needs:
+``init``/``loss``/``forward`` (train path), ``prefill``/``decode_step``/
+``init_decode_state`` (serve path), plus the input pytrees for each assigned
+input shape (real arrays for smoke tests, ShapeDtypeStructs for dry-runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, rwkv_model, transformer, zamba
+from repro.models.common import ModelConfig, init_params, param_shardings, param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Any:
+        return init_params(self.cfg, mode="init", key=key)
+
+    def shapes(self) -> Any:
+        return init_params(self.cfg, mode="shape")
+
+    def specs(self, mesh, rules=None):
+        return param_specs(self.cfg, mesh, rules)
+
+    def shardings(self, mesh, rules=None):
+        return param_shardings(self.cfg, mesh, rules)
+
+    # ------------------------------------------------------------- train
+    def loss(self, params, batch):
+        f = {
+            "decoder": transformer.loss_fn,
+            "encdec": encdec.loss_fn,
+            "rwkv6": rwkv_model.loss_fn,
+            "zamba2": zamba.loss_fn,
+        }[self.cfg.family]
+        return f(self.cfg, params, batch)
+
+    def forward(self, params, tokens, **kw):
+        f = {
+            "decoder": transformer.forward,
+            "rwkv6": rwkv_model.forward,
+            "zamba2": zamba.forward,
+        }[self.cfg.family]
+        return f(self.cfg, params, tokens, **kw)
+
+    # ------------------------------------------------------------- serve
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "decoder":
+            hidden, caches = transformer.prefill(cfg, params, batch["tokens"])
+            return hidden, caches
+        if cfg.family == "encdec":
+            enc_out = encdec.encode(cfg, params, batch["frames"])
+            hidden = encdec.decode_train(cfg, params, batch["tokens"], enc_out)
+            return hidden, None
+        if cfg.family == "rwkv6":
+            hidden, _, _ = rwkv_model.forward(cfg, params, batch["tokens"])
+            return hidden, None
+        if cfg.family == "zamba2":
+            hidden, _, caches = zamba.forward(cfg, params, batch["tokens"], collect_cache=True)
+            return hidden, caches
+        raise ValueError(cfg.family)
+
+    def init_decode_state(self, params_or_batch, batch_size: int, max_len: int):
+        cfg = self.cfg
+        if cfg.family == "decoder":
+            return transformer.init_cache(cfg, batch_size, max_len)
+        if cfg.family == "rwkv6":
+            return rwkv_model.init_state(cfg, batch_size, max_len)
+        if cfg.family == "zamba2":
+            return zamba.init_state(cfg, batch_size, max_len)
+        if cfg.family == "encdec":
+            # needs encoder frames: params_or_batch is (params, frames)
+            params, frames = params_or_batch
+            return encdec.init_state(cfg, params, frames, batch_size, max_len)
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params, state, tokens):
+        f = {
+            "decoder": transformer.decode_step,
+            "encdec": encdec.decode_step,
+            "rwkv6": rwkv_model.decode_step,
+            "zamba2": zamba.decode_step,
+        }[self.cfg.family]
+        return f(self.cfg, params, state, tokens)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,347 @@
+"""Attention variants: GQA (+bias/qk-norm), MLA, flash-chunked softmax.
+
+``flash_attention`` is the default train/prefill path: an online-softmax
+scan over KV chunks (the FlashAttention recurrence in pure JAX) so the
+(S × S) logits matrix never materializes — required for prefill_32k and the
+memory-roofline term.  ``decode_attention`` scores one query step against a
+(possibly sequence-sharded) KV cache; XLA SPMD inserts the partial-softmax
+collectives when the cache's sequence axis is sharded (DESIGN.md §4).
+
+MLA follows DeepSeek-V2/MiniCPM3: queries/keys/values are low-rank
+projections of cached *latents*; the decode path uses the absorbed form
+(W_uk folded into the query) so per-token cache is ``kv_lora + rope_dim``
+instead of ``2·H·hd``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_ctx
+from repro.models.common import ModelConfig, rms_norm, rope
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (no S×S materialization)
+# ---------------------------------------------------------------------------
+def expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """GQA: expand (B, S, KV, hd) -> (B, S, H, hd) by head-group gather.
+
+    An explicit gather (not a reshape of the head axis) keeps the expanded
+    tensor's head axis aligned with the q heads' `model` sharding: each TP
+    shard slices the kv heads its q heads need from the (replicated or
+    sharded) cache instead of forcing an axis-split reshard.
+    """
+    KV = k.shape[2]
+    g = n_heads // KV
+    idx = jnp.arange(n_heads) // g
+    out = jnp.take(k, idx, axis=2)
+    return shard_ctx.constrain(out, (None, None, "tp", None))
+
+
+def flash_attention(
+    q: jnp.ndarray,          # (B, Sq, H, hd)
+    k: jnp.ndarray,          # (B, Sk, KV, hd)
+    v: jnp.ndarray,          # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,       # absolute position of q[0] (prefill continuation)
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    causal_skip: bool = True,
+) -> jnp.ndarray:
+    """Online-softmax attention, chunked on BOTH axes (no S×S and no S×C
+    full-Sq logits tensor — peak logits live at (B, H, q_chunk, kv_chunk)).
+
+    ``causal_skip``: for aligned causal attention, iterate only the
+    lower-triangular (q_chunk, kv_chunk) tile pairs — ~2× fewer attention
+    FLOPs than masking the full rectangle (EXPERIMENTS.md §Perf iteration).
+    The pair list is static, so it lowers to one scan over nq·(nq+1)/2 tiles
+    carrying the (m, l, acc) state of ALL q chunks.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                 # may differ from hd (MLA rope-extended k)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    kh = expand_kv(k, H).astype(jnp.float32)             # (B, Sk, H, hd)
+    vh = expand_kv(v, H).astype(jnp.float32)             # (B, Sk, H, dv)
+
+    q_chunk = min(q_chunk, Sq)
+    if causal and causal_skip and q_offset == 0 and Sq == Sk:
+        kv_chunk = q_chunk          # square tiles -> clean triangle skipping
+    kv_chunk = min(kv_chunk, Sk)
+    nq = (Sq + q_chunk - 1) // q_chunk
+    nk = (Sk + kv_chunk - 1) // kv_chunk
+    qpad = nq * q_chunk - Sq
+    kpad = nk * kv_chunk - Sk
+    qf = jnp.pad((q.astype(jnp.float32) * scale), ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    kf = jnp.pad(kh, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    vf = jnp.pad(vh, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    qf = jnp.moveaxis(qf.reshape(B, nq, q_chunk, H, hd), 1, 0)   # (nq,B,qc,H,hd)
+    kf = jnp.moveaxis(kf.reshape(B, nk, kv_chunk, H, hd), 1, 0)
+    vf = jnp.moveaxis(vf.reshape(B, nk, kv_chunk, H, dv), 1, 0)
+    # pin chunk-stacked operands: batch over dp, heads over tp, the CHUNK
+    # axis replicated — per-tile dynamic slicing then stays device-local
+    # (a sequence-sharded chunk axis turns every tile fetch into an
+    # all-to-all; measured +1.7 TB/step on qwen3-moe).
+    qf = shard_ctx.constrain(qf, (None, "dp", None, "tp", None))
+    kf = shard_ctx.constrain(kf, (None, "dp", None, "tp", None))
+    vf = shard_ctx.constrain(vf, (None, "dp", None, "tp", None))
+
+    def tile(qb, q_pos, m, l, acc, kb, vb, kv_pos):
+        """One (q_chunk × kv_chunk) online-softmax update."""
+        s = jnp.einsum("bqhd,bshd->bhqs", qb, kb)        # (B,H,qc,kc)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) if causal else (
+            kv_pos[None, :] >= 0
+        )
+        mask = mask & (kv_pos[None, :] < Sk)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqs,bshd->bhqd", p, vb)
+        return m_new, l_new, acc_new
+
+    use_skip = causal and causal_skip and q_offset == 0 and Sq == Sk and nq > 1
+
+    if use_skip:
+        # static lower-triangle tile list (i >= j in chunk-grid coordinates,
+        # mapping q tile i to kv tiles [0 .. i*qc/kc])
+        pairs = [
+            (i, j) for i in range(nq) for j in range(nk)
+            if j * kv_chunk <= i * q_chunk + q_chunk - 1
+        ]
+        pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def pair_step(carry, inp):
+            m, l, acc = carry                            # (nq,B,H,qc[,dv])
+            i, j = inp
+            qb = qf[i]
+            kb, vb = kf[j], vf[j]
+            q_pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+            kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+            mi, li, ai = tile(qb, q_pos, m[i], l[i], acc[i], kb, vb, kv_pos)
+            return (m.at[i].set(mi), l.at[i].set(li), acc.at[i].set(ai)), None
+
+        m0 = jnp.full((nq, B, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((nq, B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((nq, B, H, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(pair_step, (m0, l0, a0), (pi, pj))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (nq,B,H,qc,dv)
+        out = jnp.moveaxis(out, 3, 2)                    # (nq,B,qc,H,dv)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, nq * q_chunk, H, dv)[:, :Sq]
+        return out.astype(q.dtype)
+
+    def q_step(_, q_inp):
+        qb, qi = q_inp                                   # (B,qc,H,hd), ()
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_step(carry, kv_inp):
+            m, l, acc = carry
+            kb, vb, ki = kv_inp                          # (B,kc,H,hd)
+            kv_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            return tile(qb, q_pos, m, l, acc, kb, vb, kv_pos), None
+
+        m0 = jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kf, vf, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,H,qc,dv)
+        return None, jnp.moveaxis(out, 1, 2)             # (B,qc,H,dv)
+
+    _, outs = jax.lax.scan(q_step, None, (qf, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, dv)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,          # (B, 1, H, hd)
+    k_cache: jnp.ndarray,    # (B, S, KV, hd)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # (B,) valid prefix length
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KV, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)
+    mask = pos[None, :] < cache_len[:, None]                  # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (covers dense archs; bias and qk-norm options)
+# ---------------------------------------------------------------------------
+def build_gqa_params(cfg: ModelConfig, b, prefix_layers: bool = True):
+    L = (cfg.n_layers,) if prefix_layers else ()
+    lax_ = ("layers",) if prefix_layers else ()
+    hd = cfg.hd
+    p = {
+        "wq": b(L + (cfg.d_model, cfg.n_heads, hd), lax_ + ("embed", "heads", "hd")),
+        "wk": b(L + (cfg.d_model, cfg.n_kv_heads, hd), lax_ + ("embed", "kv_heads", "hd")),
+        "wv": b(L + (cfg.d_model, cfg.n_kv_heads, hd), lax_ + ("embed", "kv_heads", "hd")),
+        "wo": b(L + (cfg.n_heads, hd, cfg.d_model), lax_ + ("heads", "hd", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = b(L + (cfg.n_heads, hd), lax_ + ("heads", "hd"), init="zeros")
+        p["bk"] = b(L + (cfg.n_kv_heads, hd), lax_ + ("kv_heads", "hd"), init="zeros")
+        p["bv"] = b(L + (cfg.n_kv_heads, hd), lax_ + ("kv_heads", "hd"), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = b(L + (hd,), lax_ + ("hd",), init="ones")
+        p["k_norm"] = b(L + (hd,), lax_ + ("hd",), init="ones")
+    return p
+
+
+def gqa_qkv(cfg: ModelConfig, p, x, positions):
+    """Project to rotary q/k and v. x (B, S, d) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(cfg: ModelConfig, p, x, positions, *, causal=True, kv=None,
+               cache=None, cache_len=None):
+    """Full GQA block: returns (out, new_kv_for_cache).
+
+    ``kv``: externally supplied (k, v) for cross-attention.
+    ``cache``/``cache_len``: decode path — append one step, score vs cache.
+    """
+    if kv is None:
+        q, k, v = gqa_qkv(cfg, p, x, positions)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        q = rope(q, positions, cfg.rope_theta)
+        k, v = kv
+
+    if cache is not None:
+        k_cache, v_cache = cache
+        k_cache = _scatter_step(k_cache, k, cache_len)
+        v_cache = _scatter_step(v_cache, v, cache_len)
+        out = decode_attention(q, k_cache, v_cache, cache_len + 1)
+        o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return o, (k_cache, v_cache)
+
+    out = flash_attention(q, k, v, causal=causal)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return o, (k, v)
+
+
+def _scatter_step(cache: jnp.ndarray, step: jnp.ndarray, lens: jnp.ndarray):
+    """Write one new (B, 1, KV, hd) step at per-row position ``lens``."""
+    B, S = cache.shape[0], cache.shape[1]
+    onehot = (jnp.arange(S)[None, :] == lens[:, None]).astype(cache.dtype)
+    return cache * (1 - onehot[:, :, None, None]) + onehot[:, :, None, None] * step.astype(cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) — MiniCPM3 / DeepSeek-V2 style
+# ---------------------------------------------------------------------------
+def build_mla_params(cfg: ModelConfig, b):
+    L = (cfg.n_layers,)
+    lax_ = ("layers",)
+    hd = cfg.hd                      # nope head dim (== v head dim)
+    rd = cfg.rope_head_dim
+    return {
+        "w_dq": b(L + (cfg.d_model, cfg.q_lora_rank), lax_ + ("embed", "rank")),
+        "q_norm": b(L + (cfg.q_lora_rank,), lax_ + ("rank",), init="ones"),
+        "w_uq": b(L + (cfg.q_lora_rank, cfg.n_heads, hd + rd), lax_ + ("rank", "heads", "hd")),
+        "w_dkv": b(L + (cfg.d_model, cfg.kv_lora_rank + rd), lax_ + ("embed", "rank")),
+        "kv_norm": b(L + (cfg.kv_lora_rank,), lax_ + ("rank",), init="ones"),
+        "w_uk": b(L + (cfg.kv_lora_rank, cfg.n_heads, hd), lax_ + ("rank", "heads", "hd")),
+        "w_uv": b(L + (cfg.kv_lora_rank, cfg.n_heads, hd), lax_ + ("rank", "heads", "hd")),
+        "wo": b(L + (cfg.n_heads, hd, cfg.d_model), lax_ + ("heads", "hd", "embed")),
+    }
+
+
+def mla_latents(cfg: ModelConfig, p, x, positions):
+    """Compute the cached latent: c_kv (B,S,r) and rotary k_rope (B,S,rd)."""
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rms_norm(dkv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(dkv[..., None, cfg.kv_lora_rank :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_queries(cfg: ModelConfig, p, x, positions):
+    hd, rd = cfg.hd, cfg.rope_head_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attend_train(cfg: ModelConfig, p, x, positions):
+    """Training/prefill MLA: materialize per-head k/v from latents."""
+    hd, rd = cfg.hd, cfg.rope_head_dim
+    c_kv, k_rope = mla_latents(cfg, p, x, positions)
+    q_nope, q_rope = mla_queries(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], k_rope.shape[:2] + (H, rd))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = flash_attention(q_full, k_full, v, causal=True)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return o, (c_kv, k_rope)
+
+
+def mla_attend_decode(cfg: ModelConfig, p, x, positions, cache, cache_len):
+    """Absorbed-form decode: score directly against the latent cache.
+
+    q̃ = q_nope · W_uk  →  (B, 1, H, r); per-token cache is just (r + rd).
+    """
+    hd, rd = cfg.hd, cfg.rope_head_dim
+    c_cache, r_cache = cache                     # (B, S, r), (B, S, rd)
+    c_new, k_rope_new = mla_latents(cfg, p, x, positions)
+    B, S = c_cache.shape[0], c_cache.shape[1]
+    onehot = (jnp.arange(S)[None, :] == cache_len[:, None]).astype(c_cache.dtype)
+    c_cache = c_cache * (1 - onehot[..., None]) + onehot[..., None] * c_new.astype(c_cache.dtype)
+    r_cache = r_cache * (1 - onehot[..., None]) + onehot[..., None] * k_rope_new.astype(r_cache.dtype)
+
+    q_nope, q_rope = mla_queries(cfg, p, x, positions)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])     # absorbed
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd + rd))
+    s = (
+        jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32), c_cache.astype(jnp.float32))
+        + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32), r_cache.astype(jnp.float32))
+    ) * scale
+    mask = jnp.arange(S)[None, :] < (cache_len + 1)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", pr, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"].astype(jnp.float32))
+    o = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return o, (c_cache, r_cache)

@@ -1,0 +1,263 @@
+"""Shared model substrate: configs, parameter builders, logical-axis sharding.
+
+Parameters are plain pytrees (nested dicts of ``jnp`` arrays).  Every leaf is
+created through a :class:`ParamBuilder` callback that records the *logical
+axes* of each dimension (``"embed"``, ``"heads"``, ``"mlp"``, ``"vocab"``,
+``"expert"``, ``"layers"`` …).  Logical axes are resolved to mesh axes by
+:func:`resolve_spec` with divisibility checks — a dimension that does not
+divide over its mesh axes is transparently replicated (e.g. kv_heads=4 on a
+16-way model axis).  The same builder runs in three modes:
+
+* ``init``  — materialize arrays (smoke tests, real training);
+* ``shape`` — ``jax.eval_shape`` for allocation-free dry-runs;
+* ``spec``  — produce the matching ``PartitionSpec`` tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config covers all 10 assigned architectures via ``family``."""
+
+    name: str = "model"
+    family: str = "decoder"          # decoder | encdec | rwkv6 | zamba2
+    n_layers: int = 12
+    d_model: int = 1024
+    n_heads: int = 16
+    n_kv_heads: int = 16
+    d_ff: int = 4096
+    vocab: int = 32000
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # mlp options
+    gated_mlp: bool = True           # False: plain GELU MLP (starcoder2)
+
+    # attention options
+    qkv_bias: bool = False           # qwen1.5
+    qk_norm: bool = False            # qwen3 / chameleon
+    rope_theta: float = 10_000.0
+
+    # MLA (minicpm3)
+    mla: bool = False
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    rope_head_dim: int = 32
+
+    # MoE (qwen3-moe, llama4)
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 1
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0        # llama4 shared expert
+    moe_every: int = 1               # llama4: MoE every k-th layer, dense otherwise
+    dense_d_ff: int = 0              # d_ff of the interleaved dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 1e-2
+
+    # SSM (rwkv6 / zamba2-mamba2)
+    ssm_state: int = 64
+    ssm_chunk: int = 64
+    attn_every: int = 6              # zamba2: shared attn block period
+
+    # enc-dec (seamless-m4t)
+    enc_layers: int = 0
+
+    # numerics / structure
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    remat: bool = True
+    logits_chunk: int = 512          # chunked cross-entropy (DESIGN.md §3)
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Total parameter count N (for MODEL_FLOPS = 6·N·D roofline term)."""
+        shapes = init_params(self, mode="shape")
+        return sum(
+            int(math.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes)
+        )
+
+    def active_param_count(self) -> int:
+        """Active-per-token N for MoE (6·N_active·D); == N for dense."""
+        if not self.moe:
+            return self.param_count()
+        total = self.param_count()
+        shapes = init_params(self, mode="shape")
+        expert_leaves = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            if any("experts" in str(p) for p in path):
+                expert_leaves += int(math.prod(leaf.shape))
+        active_frac = self.top_k / max(self.n_experts, 1)
+        return int(total - expert_leaves + expert_leaves * active_frac)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis resolution
+# ---------------------------------------------------------------------------
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": ("pod", "data"),        # FSDP shard of the contraction dim
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "layers": (),
+    "seq": (),
+    "state": (),
+    "rank": (),
+    "hd": (),
+}
+
+
+def resolve_axis(
+    logical: str | None, dim: int, mesh_shape: Mapping[str, int],
+    rules: Mapping[str, tuple[str, ...]],
+) -> tuple[str, ...] | None:
+    """Map one logical axis to mesh axes, dropping non-divisible shards."""
+    if logical is None:
+        return None
+    axes = tuple(a for a in rules.get(logical, ()) if a in mesh_shape)
+    if not axes:
+        return None
+    size = math.prod(mesh_shape[a] for a in axes)
+    if dim % size == 0:
+        return axes
+    # try a prefix that divides (keeps at least partial sharding)
+    for cut in range(len(axes) - 1, 0, -1):
+        size = math.prod(mesh_shape[a] for a in axes[:cut])
+        if dim % size == 0:
+            return axes[:cut]
+    return None
+
+
+def resolve_spec(
+    shape: Sequence[int], axes: Sequence[str | None],
+    mesh_shape: Mapping[str, int], rules: Mapping[str, tuple[str, ...]],
+) -> P:
+    assert len(shape) == len(axes), (shape, axes)
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        r = resolve_axis(ax, dim, mesh_shape, rules)
+        if r is None or any(a in used for a in r):
+            out.append(None)
+        else:
+            used.update(r)
+            out.append(r if len(r) > 1 else r[0])
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter builder
+# ---------------------------------------------------------------------------
+class ParamBuilder:
+    """Records (shape, logical axes, init) per leaf; see module docstring."""
+
+    def __init__(self, cfg: ModelConfig, mode: str, key: jax.Array | None = None,
+                 mesh: Mesh | None = None,
+                 rules: Mapping[str, tuple[str, ...]] | None = None):
+        assert mode in ("init", "shape", "spec")
+        self.cfg = cfg
+        self.mode = mode
+        self.key = key
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def __call__(self, shape: Sequence[int], axes: Sequence[str | None],
+                 init: str = "normal", scale: float | None = None):
+        shape = tuple(int(s) for s in shape)
+        if self.mode == "spec":
+            ms = {a: s for a, s in zip(self.mesh.axis_names, self.mesh.devices.shape)}
+            return resolve_spec(shape, axes, ms, self.rules)
+        dtype = self.cfg.dtype
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(self._next_key(), shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core layers (functional)
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale).astype(x.dtype) * gamma
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding over the last axis; x (..., S, H, hd), positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def init_params(cfg: ModelConfig, mode: str = "init", key=None, mesh=None, rules=None):
+    """Dispatch to the family-specific parameter builder."""
+    from repro.models import encdec, ssm, transformer, zamba
+
+    b = ParamBuilder(cfg, mode, key=key, mesh=mesh, rules=rules)
+    if cfg.family == "decoder":
+        return transformer.build_params(cfg, b)
+    if cfg.family == "encdec":
+        return encdec.build_params(cfg, b)
+    if cfg.family == "rwkv6":
+        return ssm.build_rwkv6_params(cfg, b)
+    if cfg.family == "zamba2":
+        return zamba.build_params(cfg, b)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, rules=None):
+    return init_params(cfg, mode="spec", mesh=mesh, rules=rules)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules=None):
+    specs = param_specs(cfg, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))

@@ -1,0 +1,194 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the harness instruction: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d_model) directly to the
+encoder.  The decoder is a standard causal stack with cross-attention whose
+K/V come from the encoder output (cached once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import shard_ctx
+from repro.models.common import ModelConfig, rms_norm, swiglu
+from repro.models.transformer import lm_loss, unembed
+
+
+def _ffn_params(cfg, b, L, lax_):
+    return {
+        "w_gate": b(L + (cfg.d_model, cfg.d_ff), lax_ + ("embed", "mlp")),
+        "w_up": b(L + (cfg.d_model, cfg.d_ff), lax_ + ("embed", "mlp")),
+        "w_down": b(L + (cfg.d_ff, cfg.d_model), lax_ + ("mlp", "embed")),
+    }
+
+
+def build_params(cfg: ModelConfig, b):
+    enc_l = cfg.enc_layers or cfg.n_layers
+    Le, Ld = (enc_l,), (cfg.n_layers,)
+    lax_ = ("layers",)
+    enc = {
+        "ln1": b(Le + (cfg.d_model,), lax_ + ("embed",), init="ones"),
+        "attn": {
+            **{k: v for k, v in attn.build_gqa_params(
+                dataclasses_replace(cfg, n_layers=enc_l), b).items()},
+        },
+        "ln2": b(Le + (cfg.d_model,), lax_ + ("embed",), init="ones"),
+        "mlp": _ffn_params(cfg, b, Le, lax_),
+    }
+    dec = {
+        "ln1": b(Ld + (cfg.d_model,), lax_ + ("embed",), init="ones"),
+        "self_attn": attn.build_gqa_params(cfg, b),
+        "ln_x": b(Ld + (cfg.d_model,), lax_ + ("embed",), init="ones"),
+        "cross_attn": attn.build_gqa_params(cfg, b),
+        "ln2": b(Ld + (cfg.d_model,), lax_ + ("embed",), init="ones"),
+        "mlp": _ffn_params(cfg, b, Ld, lax_),
+    }
+    return {
+        "frame_proj": b((cfg.d_model, cfg.d_model), ("embed", "mlp")),
+        "embed": b((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "encoder": enc,
+        "decoder": dec,
+        "ln_enc": b((cfg.d_model,), ("embed",), init="ones"),
+        "ln_f": b((cfg.d_model,), ("embed",), init="ones"),
+        "unembed": b((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def dataclasses_replace(cfg, **kw):
+    import dataclasses
+
+    return dataclasses.replace(cfg, **kw)
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames (B, S_enc, d_model) -> encoder output (B, S_enc, d_model)."""
+    x = jnp.einsum("bsd,de->bse", frames.astype(cfg.dtype), params["frame_proj"])
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def blk(xx, p_l):
+        xx = shard_ctx.constrain(xx, ("dp", "tp", None))
+        h = rms_norm(xx, p_l["ln1"], cfg.norm_eps)
+        a, _ = attn.gqa_attend(cfg, p_l["attn"], h, positions, causal=False)
+        xx = xx + a
+        h = rms_norm(xx, p_l["ln2"], cfg.norm_eps)
+        return xx + swiglu(h, p_l["mlp"]["w_gate"], p_l["mlp"]["w_up"], p_l["mlp"]["w_down"])
+
+    body = _maybe_remat(cfg, blk)
+    x, _ = jax.lax.scan(lambda xx, pl: (body(xx, pl), 0), x, params["encoder"])
+    out = rms_norm(x, params["ln_enc"], cfg.norm_eps)
+    return shard_ctx.constrain(out, ("dp", None, None))
+
+
+def _dec_block(cfg, p_l, x, positions, enc_kv, self_cache=None, cache_len=None):
+    if self_cache is None:
+        x = shard_ctx.constrain(x, ("dp", "tp", None))
+    h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    if self_cache is None:
+        a, kv = attn.gqa_attend(cfg, p_l["self_attn"], h, positions, causal=True)
+    else:
+        a, kv = attn.gqa_attend(
+            cfg, p_l["self_attn"], h, positions, cache=self_cache, cache_len=cache_len
+        )
+    x = x + a
+    h = rms_norm(x, p_l["ln_x"], cfg.norm_eps)
+    ca, _ = attn.gqa_attend(cfg, p_l["cross_attn"], h, positions, causal=False, kv=enc_kv)
+    x = x + ca
+    h = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+    x = x + swiglu(h, p_l["mlp"]["w_gate"], p_l["mlp"]["w_up"], p_l["mlp"]["w_down"])
+    return x, kv
+
+
+def cross_kv(cfg: ModelConfig, params, enc_out):
+    """Precompute per-layer cross-attention K/V from the encoder output."""
+    B, S, _ = enc_out.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def one(p_l):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p_l["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p_l["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            k = k + p_l["cross_attn"]["bk"]
+            v = v + p_l["cross_attn"]["bv"]
+        if cfg.qk_norm:
+            k = rms_norm(k, p_l["cross_attn"]["k_norm"], cfg.norm_eps)
+        from repro.models.common import rope
+
+        k = rope(k, positions, cfg.rope_theta)
+        k = shard_ctx.constrain(k, ("dp", None, "tp", None))
+        v = shard_ctx.constrain(v, ("dp", None, "tp", None))
+        return k, v
+
+    return jax.vmap(one)(params["decoder"])
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out):
+    x = params["embed"][tokens]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_kvs = cross_kv(cfg, params, enc_out)
+
+    body = _maybe_remat(
+        cfg, lambda xx, p_l, ekv: _dec_block(cfg, p_l, xx, positions, ekv)[0]
+    )
+    def scan_fn(xx, inp):
+        p_l, ekv = inp
+        return body(xx, p_l, ekv), 0
+
+    x, _ = jax.lax.scan(scan_fn, x, (params["decoder"], enc_kvs))
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    hidden = decode_train(cfg, params, batch["tokens"], enc_out)
+    ce = lm_loss(cfg, params, hidden, batch["labels"], batch["mask"])
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+class EncDecState(NamedTuple):
+    self_cache: Any
+    enc_kvs: Any
+    cache_len: jnp.ndarray
+
+
+def init_state(cfg: ModelConfig, params, frames, batch: int, max_len: int):
+    enc_out = encode(cfg, params, frames)
+    enc_kvs = cross_kv(cfg, params, enc_out)
+    kv_shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    cache = (jnp.zeros(kv_shape, cfg.dtype), jnp.zeros(kv_shape, cfg.dtype))
+    return EncDecState(cache, enc_kvs, jnp.zeros((batch,), jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, state: EncDecState, tokens):
+    x = params["embed"][tokens]
+    positions = state.cache_len[:, None]
+
+    def scan_fn(xx, inp):
+        p_l, cache_l, ekv = inp
+        h = rms_norm(xx, p_l["ln1"], cfg.norm_eps)
+        a, new_cache = attn.gqa_attend(
+            cfg, p_l["self_attn"], h, positions, cache=cache_l, cache_len=state.cache_len
+        )
+        xx = xx + a
+        h = rms_norm(xx, p_l["ln_x"], cfg.norm_eps)
+        ca, _ = attn.gqa_attend(cfg, p_l["cross_attn"], h, positions, causal=False, kv=ekv)
+        xx = xx + ca
+        h = rms_norm(xx, p_l["ln2"], cfg.norm_eps)
+        xx = xx + swiglu(h, p_l["mlp"]["w_gate"], p_l["mlp"]["w_up"], p_l["mlp"]["w_down"])
+        return xx, new_cache
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["decoder"], state.self_cache, state.enc_kvs))
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(cfg, params, h)[:, 0]
+    return EncDecState(new_cache, state.enc_kvs, state.cache_len + 1), logits

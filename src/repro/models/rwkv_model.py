@@ -1,0 +1,68 @@
+"""RWKV6 (Finch) full model: attention-free LM with O(1) decode state."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.common import ModelConfig, rms_norm
+from repro.models.transformer import lm_loss, unembed
+
+
+def forward(cfg: ModelConfig, params, tokens, *, collect_state=False):
+    x = params["embed"][tokens]
+    body = (
+        jax.checkpoint(
+            lambda xx, p_l: ssm.rwkv6_block(cfg, p_l, xx)[0],
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+        if cfg.remat
+        else (lambda xx, p_l: ssm.rwkv6_block(cfg, p_l, xx)[0])
+    )
+    x, _ = jax.lax.scan(lambda xx, pl: (body(xx, pl), 0), x, params["blocks"])
+    return rms_norm(x, params["ln_out"], cfg.norm_eps), 0.0, None
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    hidden, aux, _ = forward(cfg, params, batch["tokens"])
+    ce = lm_loss(cfg, params, hidden, batch["labels"], batch["mask"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+class RwkvState(NamedTuple):
+    wkv: jnp.ndarray       # (L, B, H, hd, hd) fp32
+    shift_a: jnp.ndarray   # (L, B, 1, d)
+    shift_b: jnp.ndarray   # (L, B, 1, d)
+    cache_len: jnp.ndarray # (B,) position counter (no KV growth — O(1) state)
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int = 0):
+    d = cfg.d_model
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    hd = d // H
+    L = cfg.n_layers
+    return RwkvState(
+        jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        jnp.zeros((L, batch, 1, d), cfg.dtype),
+        jnp.zeros((L, batch, 1, d), cfg.dtype),
+        jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def decode_step(cfg: ModelConfig, params, state: RwkvState, tokens):
+    """One token through all layers; the recurrent state replaces any KV."""
+    x = params["embed"][tokens]           # (B, 1, d)
+
+    def scan_fn(xx, inp):
+        p_l, wkv_l, sa_l, sb_l = inp
+        y, (nw, nsa, nsb) = ssm.rwkv6_block(cfg, p_l, xx, state=(wkv_l, sa_l, sb_l))
+        return y, (nw, nsa, nsb)
+
+    x, (nw, nsa, nsb) = jax.lax.scan(
+        scan_fn, x, (params["blocks"], state.wkv, state.shift_a, state.shift_b)
+    )
+    h = rms_norm(x, params["ln_out"], cfg.norm_eps)
+    logits = unembed(cfg, params, h)[:, 0]
+    return RwkvState(nw, nsa, nsb, state.cache_len + 1), logits

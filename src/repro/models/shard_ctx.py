@@ -1,0 +1,96 @@
+"""Mesh-aware sharding hints for model internals.
+
+Model code is mesh-agnostic; launchers ``activate(mesh)`` before tracing and
+the helpers here resolve symbolic dims — ``"dp"`` (pod+data), ``"tp"``
+(model) — into concrete PartitionSpecs, silently no-op'ing when inactive
+(CPU tests).  Used for the constraints XLA cannot infer profitably on its
+own: sequence-parallel residual streams between blocks (saved scan carries
+shrink by the TP degree) and head-aligned attention intermediates.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterable
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_MESH = None  # concrete jax.sharding.Mesh when active
+
+
+def activate(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def deactivate() -> None:
+    global _MESH
+    _MESH = None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    activate(mesh)
+    try:
+        with mesh:
+            yield
+    finally:
+        deactivate()
+
+
+def active() -> bool:
+    return _MESH is not None
+
+
+def dp_size() -> int:
+    """Product of the data-parallel axes (1 when inactive)."""
+    if _MESH is None:
+        return 1
+    import math
+
+    return math.prod(
+        s for a, s in dict(_MESH.shape).items() if a in ("pod", "data")
+    )
+
+
+def tp_size() -> int:
+    if _MESH is None:
+        return 1
+    return dict(_MESH.shape).get("model", 1)
+
+
+def _resolve(dim):
+    """Map symbolic dim -> mesh axes (or None when axes absent)."""
+    axes = set(_MESH.axis_names)
+    if dim is None:
+        return None
+    if dim == "dp":
+        use = tuple(a for a in ("pod", "data") if a in axes)
+        return use if use else None
+    if dim == "tp":
+        return "model" if "model" in axes else None
+    return dim if dim in axes else None
+
+
+def constrain(x, dims: Iterable, *, divisible: bool = True):
+    """with_sharding_constraint(x, NamedSharding(mesh, P(resolved dims)));
+    no-op when inactive or when a dim does not divide its axes."""
+    if _MESH is None:
+        return x
+    import math
+
+    from jax.sharding import NamedSharding
+
+    sizes = dict(_MESH.shape)
+    resolved = []
+    for i, dim in enumerate(dims):
+        r = _resolve(dim)
+        if r is not None and divisible:
+            axes = r if isinstance(r, tuple) else (r,)
+            sz = math.prod(sizes.get(a, 1) for a in axes)
+            if sz and x.shape[i] % sz != 0:
+                r = None
+        resolved.append(r)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*resolved))
+    )

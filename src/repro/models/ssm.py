@@ -1,0 +1,305 @@
+"""SSM / linear-recurrence core: chunked decayed linear attention.
+
+One chunk-parallel primitive serves both assigned recurrent families
+(DESIGN.md §5):
+
+* **RWKV6 (Finch)** — per-channel data-dependent decay ``w_t ∈ (0,1)^{dk}``,
+  bonus ``u`` on the current token, strict (i < t) intra-chunk mask;
+* **Mamba2 (SSD)**  — per-head scalar decay broadcast over the state dim,
+  inclusive (i ≤ t) mask, no bonus.
+
+Math (per head; ``P_t = ∏_{j≤t} w_j`` within a chunk):
+``S_t = diag(P_t)(S_0 + Σ_{i≤t} (k_i/P_i) ⊗ v_i)`` so with
+``q̃_t = q_t⊙P_t`` and ``k̃_i = k_i/P_i`` the intra-chunk part is a masked
+matmul ``(q̃ k̃ᵀ ⊙ M) v`` — MXU-shaped, and the inter-chunk part is a scan
+over chunk states.  Cumulative products run in log space with clamping.
+
+This is the TPU-native replacement for the CUDA scan kernels those papers
+ship; the sequential dimension collapses from S to S/chunk.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_ctx
+from repro.models.common import ModelConfig, rms_norm
+
+_LOG_MIN = -60.0  # clamp for cumulative log-decay (exp(-60) ~ 1e-26)
+
+
+def chunked_linear_attention(
+    q: jnp.ndarray,        # (B, S, H, Dk)
+    k: jnp.ndarray,        # (B, S, H, Dk)
+    v: jnp.ndarray,        # (B, S, H, Dv)
+    log_w: jnp.ndarray,    # (B, S, H, Dk) negative log-decay (log w_t)
+    *,
+    bonus: jnp.ndarray | None = None,   # (H, Dk) current-token bonus (RWKV6)
+    inclusive: bool = True,             # True: mamba (i ≤ t); False: rwkv (i < t)
+    chunk: int = 64,
+    initial_state: jnp.ndarray | None = None,  # (B, H, Dk, Dv)
+):
+    """Returns (out (B, S, H, Dv), final_state (B, H, Dk, Dv))."""
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    chunk = min(chunk, S)
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+
+    def pad_t(x):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = pad_t(q).astype(jnp.float32).reshape(B, n, chunk, H, Dk)
+    kf = pad_t(k).astype(jnp.float32).reshape(B, n, chunk, H, Dk)
+    vf = pad_t(v).astype(jnp.float32).reshape(B, n, chunk, H, Dv)
+    # padded steps get decay 1 (log 0) and k=0 so they don't disturb state
+    lw = jnp.pad(log_w.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if pad:
+        kill = (jnp.arange(n * chunk) >= S).reshape(n, chunk)
+        kf = jnp.where(kill[None, :, :, None, None], 0.0, kf)
+    lw = lw.reshape(B, n, chunk, H, Dk)
+
+    cum = jnp.cumsum(lw, axis=2)                      # log P_t
+    cum = jnp.maximum(cum, _LOG_MIN)
+    p_t = jnp.exp(cum)
+    inv_p = jnp.exp(-cum)
+    if inclusive:
+        q_eff = qf * p_t
+    else:
+        q_eff = qf * jnp.exp(jnp.maximum(cum - lw, _LOG_MIN))  # P_{t-1} = P_t / w_t
+    k_eff = kf * inv_p
+
+    # Intra-chunk masked attention.
+    s = jnp.einsum("bnthd,bnshd->bnhts", q_eff, k_eff)         # (B,n,H,t,s)
+    ti = jnp.arange(chunk)
+    mask = ti[:, None] >= ti[None, :] if inclusive else ti[:, None] > ti[None, :]
+    s = jnp.where(mask[None, None, None, :, :], s, 0.0)
+    intra = jnp.einsum("bnhts,bnshd->bnthd", s, vf)            # (B,n,t,H,Dv)
+
+    if bonus is not None:
+        diag = jnp.einsum("bnthd,bnthd->bnth", qf, kf * bonus[None, None, None])
+        intra = intra + diag[..., None] * vf
+
+    # Inter-chunk: scan chunk states S_c.
+    p_last = p_t[:, :, -1]                                     # (B,n,H,Dk)
+    kv_chunk = jnp.einsum("bnshd,bnshe->bnhde", k_eff, vf)     # (B,n,H,Dk,Dv)
+
+    def step(S0, inp):
+        pl_, kvc = inp                                         # (B,H,Dk), (B,H,Dk,Dv)
+        S_new = pl_[..., None] * (S0 + kvc)
+        return S_new, S0
+
+    init = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    )
+    final, S_prevs = jax.lax.scan(
+        step, init, (jnp.moveaxis(p_last, 1, 0), jnp.moveaxis(kv_chunk, 1, 0))
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                      # (B,n,H,Dk,Dv)
+    inter = jnp.einsum("bnthd,bnhde->bnthe", q_eff, S_prevs)
+    out = (intra + inter).reshape(B, n * chunk, H, Dv)[:, :S]
+    return out.astype(q.dtype), final
+
+
+def linear_attention_step(
+    q: jnp.ndarray,        # (B, H, Dk) one step
+    k: jnp.ndarray,
+    v: jnp.ndarray,        # (B, H, Dv)
+    w: jnp.ndarray,        # (B, H, Dk) decay in (0,1)
+    state: jnp.ndarray,    # (B, H, Dk, Dv)
+    *,
+    bonus: jnp.ndarray | None = None,
+    inclusive: bool = True,
+):
+    """Single-token recurrence (decode path); mirrors the chunked math."""
+    qf, kf, vf, wf = (t.astype(jnp.float32) for t in (q, k, v, w))
+    st = state.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    if inclusive:
+        new_state = wf[..., None] * st + kv
+        out = jnp.einsum("bhd,bhde->bhe", qf, new_state)
+    else:
+        read = st + (bonus[None, ..., None] * kv if bonus is not None else 0.0)
+        out = jnp.einsum("bhd,bhde->bhe", qf, read)
+        new_state = wf[..., None] * st + kv
+    return out.astype(q.dtype), new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) blocks
+# ---------------------------------------------------------------------------
+def build_rwkv6_params(cfg: ModelConfig, b):
+    L = (cfg.n_layers,)
+    lax_ = ("layers",)
+    d = cfg.d_model
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    hd = d // H
+    lora = 64
+    blocks = {
+        "ln1": b(L + (d,), lax_ + ("embed",), init="ones"),
+        "ln2": b(L + (d,), lax_ + ("embed",), init="ones"),
+        # time-mix lerp coefficients (token shift)
+        "mu_r": b(L + (d,), lax_ + ("embed",), init="zeros"),
+        "mu_k": b(L + (d,), lax_ + ("embed",), init="zeros"),
+        "mu_v": b(L + (d,), lax_ + ("embed",), init="zeros"),
+        "mu_w": b(L + (d,), lax_ + ("embed",), init="zeros"),
+        "mu_g": b(L + (d,), lax_ + ("embed",), init="zeros"),
+        "w_r": b(L + (d, H, hd), lax_ + ("embed", "heads", "hd")),
+        "w_k": b(L + (d, H, hd), lax_ + ("embed", "heads", "hd")),
+        "w_v": b(L + (d, H, hd), lax_ + ("embed", "heads", "hd")),
+        "w_g": b(L + (d, d), lax_ + ("embed", "mlp")),
+        "w_o": b(L + (H, hd, d), lax_ + ("heads", "hd", "embed")),
+        # data-dependent decay LoRA (Finch): w_t = exp(-exp(base + lora(x)))
+        "decay_base": b(L + (H, hd), lax_ + ("heads", "hd"), init="zeros"),
+        "decay_lora_a": b(L + (d, lora), lax_ + ("embed", "rank")),
+        "decay_lora_b": b(L + (lora, H, hd), lax_ + ("rank", "heads", "hd"), init="zeros"),
+        "bonus": b(L + (H, hd), lax_ + ("heads", "hd"), init="zeros"),
+        "gn": b(L + (H, hd), lax_ + ("heads", "hd"), init="ones"),
+        # channel-mix FFN
+        "mu_ffn_k": b(L + (d,), lax_ + ("embed",), init="zeros"),
+        "w_ffn_k": b(L + (d, cfg.d_ff), lax_ + ("embed", "mlp")),
+        "w_ffn_v": b(L + (cfg.d_ff, d), lax_ + ("mlp", "embed")),
+        "w_ffn_r": b(L + (d, d), lax_ + ("embed", "mlp")),
+    }
+    return {
+        "embed": b((cfg.vocab, d), ("vocab", "embed"), scale=0.02),
+        "blocks": blocks,
+        "ln_out": b((d,), ("embed",), init="ones"),
+        "unembed": b((d, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray | None = None):
+    """x (B,S,d) -> previous-token features (zero/carry at position 0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_block(cfg: ModelConfig, p, x, *, state=None):
+    """One RWKV6 layer (time-mix + channel-mix).
+
+    ``state`` is ``(S, shift_a, shift_b)``: the wkv matrix state plus the two
+    token-shift carries (time-mix and channel-mix).  Returns (y, new_state).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    hd = d // H
+    wkv_state, shift_a, shift_b = state if state is not None else (None, None, None)
+    x = shard_ctx.constrain(x, ("dp", "tp", None))
+
+    xa = rms_norm(x, p["ln1"], cfg.norm_eps)
+    xs = _token_shift(xa, shift_a)
+    mix = lambda mu: xa + (xs - xa) * jax.nn.sigmoid(mu)
+    r = jnp.einsum("bsd,dhk->bshk", mix(p["mu_r"]), p["w_r"])
+    k = jnp.einsum("bsd,dhk->bshk", mix(p["mu_k"]), p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", mix(p["mu_v"]), p["w_v"])
+    g = jax.nn.silu(
+        jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["w_g"]).astype(jnp.float32)
+    ).astype(x.dtype)
+
+    lora = jnp.einsum("bsd,dr->bsr", mix(p["mu_w"]), p["decay_lora_a"])
+    lora = jnp.einsum("bsr,rhk->bshk", jnp.tanh(lora.astype(jnp.float32)).astype(x.dtype), p["decay_lora_b"])
+    log_w = -jnp.exp(
+        jnp.clip(p["decay_base"][None, None].astype(jnp.float32) + lora.astype(jnp.float32), -8.0, 4.0)
+    )  # log w_t = -exp(·) < 0 ⇒ w ∈ (0,1)
+
+    bonus = p["bonus"].astype(jnp.float32)
+    o, new_wkv = chunked_linear_attention(
+        r, k, v, log_w, bonus=bonus, inclusive=False, chunk=cfg.ssm_chunk,
+        initial_state=wkv_state,
+    )
+    o32 = o.astype(jnp.float32)
+    o32 = o32 * jax.lax.rsqrt(jnp.mean(o32 * o32, axis=-1, keepdims=True) + cfg.norm_eps)
+    o = (o32 * p["gn"][None, None].astype(jnp.float32)).astype(x.dtype)
+    o = (o.reshape(B, S, d) * g.reshape(B, S, d))
+    att = jnp.einsum("bshk,hkd->bsd", o.reshape(B, S, H, hd), p["w_o"])
+    x = x + att
+    new_shift_a = xa[:, -1:]
+
+    xb = rms_norm(x, p["ln2"], cfg.norm_eps)
+    xbs = _token_shift(xb, shift_b)
+    kf = jnp.einsum("bsd,df->bsf", xb + (xbs - xb) * jax.nn.sigmoid(p["mu_ffn_k"]), p["w_ffn_k"])
+    kf = jnp.square(jax.nn.relu(kf.astype(jnp.float32))).astype(x.dtype)
+    ffn = jnp.einsum("bsf,fd->bsd", kf, p["w_ffn_v"])
+    rg = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xbs, p["w_ffn_r"]).astype(jnp.float32)).astype(x.dtype)
+    x = x + ffn * rg
+    new_shift_b = xb[:, -1:]
+    return x, (new_wkv, new_shift_a, new_shift_b)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block — used by the zamba2 hybrid
+# ---------------------------------------------------------------------------
+def build_mamba2_params(cfg: ModelConfig, b, d_inner: int, prefix_layers=True):
+    L = (cfg.n_layers,) if prefix_layers else ()
+    lax_ = ("layers",) if prefix_layers else ()
+    d = cfg.d_model
+    N = cfg.ssm_state
+    H = d_inner // 64                      # head dim 64
+    return {
+        "ln": b(L + (d,), lax_ + ("embed",), init="ones"),
+        "w_in": b(L + (d, 2 * d_inner), lax_ + ("embed", "mlp")),
+        "w_bc": b(L + (d, 2 * N), lax_ + ("embed", "state")),
+        "w_dt": b(L + (d, H), lax_ + ("embed", "heads")),
+        "dt_bias": b(L + (H,), lax_ + ("heads",), init="zeros"),
+        "a_log": b(L + (H,), lax_ + ("heads",), init="zeros"),
+        "conv_w": b(L + (4, d_inner + 2 * N), lax_ + (None, "mlp"), scale=0.5),
+        "d_skip": b(L + (H,), lax_ + ("heads",), init="ones"),
+        "gn": b(L + (d_inner,), lax_ + ("mlp",), init="ones"),
+        "w_out": b(L + (d_inner, d), lax_ + ("mlp", "embed")),
+    }
+
+
+def mamba2_block(cfg: ModelConfig, p, x, d_inner: int, *, state=None, conv_state=None):
+    """Mamba2/SSD block (simplified single-group).  Returns (y, (ssm, conv))."""
+    B, S, d = x.shape
+    N = cfg.ssm_state
+    H = d_inner // 64
+    P = 64
+
+    x = shard_ctx.constrain(x, ("dp", "tp", None))
+    xi = rms_norm(x, p["ln"], cfg.norm_eps)
+    zu = jnp.einsum("bsd,de->bse", xi, p["w_in"])
+    z, u = jnp.split(zu, 2, axis=-1)                  # gate, value (B,S,d_inner)
+    bc = jnp.einsum("bsd,dn->bsn", xi, p["w_bc"])     # (B,S,2N)
+
+    # depthwise causal conv (width 4) over concat([u, bc])
+    cu = jnp.concatenate([u, bc], axis=-1)
+    if conv_state is None:
+        conv_in = jnp.pad(cu, ((0, 0), (3, 0), (0, 0)))
+    else:
+        conv_in = jnp.concatenate([conv_state.astype(cu.dtype), cu], axis=1)
+    w = p["conv_w"]                                   # (4, channels)
+    conv = sum(conv_in[:, i : i + S] * w[i][None, None] for i in range(4))
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    u_c, bc_c = conv[..., :d_inner], conv[..., d_inner:]
+    b_in, c_in = jnp.split(bc_c, 2, axis=-1)          # (B,S,N) each
+    new_conv_state = conv_in[:, S : S + 3] if conv_state is not None else cu[:, -3:]
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xi, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )                                                  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))       # (H,) negative
+    log_decay = dt * a[None, None]                     # (B,S,H) = log w_t
+
+    uh = u_c.reshape(B, S, H, P).astype(jnp.float32) * dt[..., None]
+    q = jnp.broadcast_to(c_in[:, :, None, :], (B, S, H, N))
+    k = jnp.broadcast_to(b_in[:, :, None, :], (B, S, H, N))
+    lw = jnp.broadcast_to(log_decay[..., None], (B, S, H, N))
+
+    o, new_state = chunked_linear_attention(
+        q, k, uh.astype(x.dtype), lw, inclusive=True, chunk=cfg.ssm_chunk,
+        initial_state=state,
+    )
+    o = o.astype(jnp.float32) + p["d_skip"].astype(jnp.float32)[None, None, :, None] * u_c.reshape(B, S, H, P).astype(jnp.float32)
+    o = o.reshape(B, S, d_inner)
+    o = o * jax.lax.rsqrt(jnp.mean(o * o, axis=-1, keepdims=True) + cfg.norm_eps)
+    o = (o * p["gn"][None, None].astype(jnp.float32)).astype(x.dtype)
+    o = o * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + jnp.einsum("bse,ed->bsd", o, p["w_out"]), (new_state, new_conv_state)

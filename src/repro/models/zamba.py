@@ -1,0 +1,187 @@
+"""Zamba2 hybrid: Mamba2 (SSD) backbone + one SHARED attention block applied
+every ``attn_every`` layers (weight reuse is the Zamba signature).
+
+Simplifications vs the released checkpoint (noted in DESIGN.md §5): a single
+shared transformer block without per-invocation LoRA deltas, applied after
+every ``attn_every``-th mamba layer; the shared block sees the raw residual
+stream (no concat re-projection).  Structure — interleaving, weight sharing,
+per-site KV caches — matches the paper's scaling rationale.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import shard_ctx
+from repro.models import ssm
+from repro.models.common import ModelConfig, rms_norm, swiglu
+from repro.models.transformer import lm_loss, unembed
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_model
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return max(cfg.n_layers // cfg.attn_every, 1)
+
+
+def build_params(cfg: ModelConfig, b):
+    di = _d_inner(cfg)
+    shared_cfg = cfg
+    shared = {
+        "ln1": b((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn.build_gqa_params(shared_cfg, b, prefix_layers=False),
+        "ln2": b((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": {
+            "w_gate": b((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+            "w_up": b((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+            "w_down": b((cfg.d_ff, cfg.d_model), ("mlp", "embed")),
+        },
+    }
+    return {
+        "embed": b((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "mamba": ssm.build_mamba2_params(cfg, b, di),
+        "shared_attn": shared,
+        "ln_f": b((cfg.d_model,), ("embed",), init="ones"),
+        "unembed": b((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def _shared_block(cfg, p, x, positions, cache=None, cache_len=None):
+    if cache is None:
+        x = shard_ctx.constrain(x, ("dp", "tp", None))
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cache is None:
+        a, kv = attn.gqa_attend(cfg, p["attn"], h, positions, causal=True)
+    else:
+        a, kv = attn.gqa_attend(
+            cfg, p["attn"], h, positions, cache=cache, cache_len=cache_len
+        )
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"]), kv
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def forward(cfg: ModelConfig, params, tokens, *, collect_cache=False):
+    """Training/prefill forward.  Returns (hidden, aux, attn_kv_caches)."""
+    di = _d_inner(cfg)
+    x = params["embed"][tokens]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    sites = n_attn_sites(cfg)
+    per = cfg.n_layers // sites
+
+    mamba_body = _maybe_remat(
+        cfg, lambda xx, p_l: ssm.mamba2_block(cfg, p_l, xx, di)[0]
+    )
+    shared_body = _maybe_remat(
+        cfg, lambda xx: _shared_block(cfg, params["shared_attn"], xx, positions)
+    )
+
+    # group mamba layers: (sites, per, ...) and interleave the shared block
+    grouped = jax.tree.map(
+        lambda a: a[: sites * per].reshape((sites, per) + a.shape[1:]), params["mamba"]
+    )
+    kvs = []
+    for g in range(sites):
+        p_g = jax.tree.map(lambda a: a[g], grouped)
+        x, _ = jax.lax.scan(lambda xx, pl: (mamba_body(xx, pl), 0), x, p_g)
+        x, kv = shared_body(x)
+        kvs.append(kv)
+    # trailing mamba layers not in a full group
+    rem = cfg.n_layers - sites * per
+    if rem:
+        p_r = jax.tree.map(lambda a: a[sites * per :], params["mamba"])
+        x, _ = jax.lax.scan(lambda xx, pl: (mamba_body(xx, pl), 0), x, p_r)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    caches = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs) if collect_cache else None
+    return x, 0.0, caches
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    hidden, aux, _ = forward(cfg, params, batch["tokens"])
+    ce = lm_loss(cfg, params, hidden, batch["labels"], batch["mask"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+class ZambaState(NamedTuple):
+    ssm_state: Any        # (L, B, H, Dk, Dv) stacked mamba states
+    conv_state: Any       # (L, B, 3, channels)
+    attn_cache: Any       # per-site KV: (sites, B, S, KV, hd) ×2
+    cache_len: jnp.ndarray
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int):
+    di = _d_inner(cfg)
+    H = di // 64
+    N = cfg.ssm_state
+    sites = n_attn_sites(cfg)
+    kv_shape = (sites, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return ZambaState(
+        jnp.zeros((cfg.n_layers, batch, H, N, 64), jnp.float32),
+        jnp.zeros((cfg.n_layers, batch, 3, di + 2 * cfg.ssm_state), cfg.dtype),
+        (jnp.zeros(kv_shape, cfg.dtype), jnp.zeros(kv_shape, cfg.dtype)),
+        jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def decode_step(cfg: ModelConfig, params, state: ZambaState, tokens):
+    di = _d_inner(cfg)
+    x = params["embed"][tokens]
+    positions = state.cache_len[:, None]
+    sites = n_attn_sites(cfg)
+    per = cfg.n_layers // sites
+
+    def mamba_scan(xx, inp):
+        p_l, s_l, c_l = inp
+        y, (new_s, new_c) = ssm.mamba2_block(
+            cfg, p_l, xx, di, state=s_l, conv_state=c_l
+        )
+        return y, (new_s, new_c)
+
+    grouped_p = jax.tree.map(
+        lambda a: a[: sites * per].reshape((sites, per) + a.shape[1:]), params["mamba"]
+    )
+    new_ssm, new_conv, new_kv = [], [], []
+    for g in range(sites):
+        p_g = jax.tree.map(lambda a: a[g], grouped_p)
+        s_g = state.ssm_state[g * per : (g + 1) * per]
+        c_g = state.conv_state[g * per : (g + 1) * per]
+        x, (ns, nc) = jax.lax.scan(mamba_scan, x, (p_g, s_g, c_g))
+        new_ssm.append(ns)
+        new_conv.append(nc)
+        cache_g = jax.tree.map(lambda a: a[g], state.attn_cache)
+        x, kv = _shared_block(
+            cfg, params["shared_attn"], x, positions, cache=cache_g,
+            cache_len=state.cache_len,
+        )
+        new_kv.append(kv)
+    rem = cfg.n_layers - sites * per
+    if rem:
+        p_r = jax.tree.map(lambda a: a[sites * per :], params["mamba"])
+        s_r = state.ssm_state[sites * per :]
+        c_r = state.conv_state[sites * per :]
+        x, (ns, nc) = jax.lax.scan(mamba_scan, x, (p_r, s_r, c_r))
+        new_ssm.append(ns)
+        new_conv.append(nc)
+
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(cfg, params, h)[:, 0]
+    new_state = ZambaState(
+        jnp.concatenate(new_ssm, axis=0),
+        jnp.concatenate(new_conv, axis=0),
+        jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv),
+        state.cache_len + 1,
+    )
+    return new_state, logits

@@ -1,0 +1,2 @@
+"""Serving: batched decode engine + embedding extraction."""
+from repro.serve.engine import ServeEngine

@@ -1,0 +1,76 @@
+"""Serving substrate: batched decode driver + embedding extraction.
+
+``ServeEngine`` is the host-side loop: it jits ``decode_step`` once per
+(batch, cache) shape, runs greedy/temperature decoding over a batch of
+requests, and exposes ``embed`` — mean-pooled final hidden states — which is
+what populates the paper's unified interval-aware index (the retrieval
+deployment in launch/serve.py: embed → UG search under IF/IS/RF/RS).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.models import transformer as tr
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: Any
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        self._decode = jax.jit(
+            lambda p, s, t: self.model.decode_step(p, s, t)
+        )
+        self._embed = jax.jit(self._embed_impl)
+
+    # ------------------------------------------------------------- embed
+    def _embed_impl(self, params, tokens, mask):
+        hidden, _, _ = self.model.forward(params, tokens)
+        m = mask[..., None].astype(hidden.dtype)
+        pooled = jnp.sum(hidden * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+        # L2-normalize: cosine <-> euclidean equivalence for the index
+        n = jnp.linalg.norm(pooled.astype(jnp.float32), axis=-1, keepdims=True)
+        return (pooled.astype(jnp.float32) / jnp.maximum(n, 1e-6))
+
+    def embed(self, tokens: jnp.ndarray, mask: jnp.ndarray | None = None):
+        if mask is None:
+            mask = jnp.ones(tokens.shape, jnp.float32)
+        return self._embed(self.params, tokens, mask)
+
+    # ------------------------------------------------------------- decode
+    def generate(
+        self,
+        prompts: jnp.ndarray,       # (B, S_prompt) int32
+        max_new: int = 16,
+        *,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> jnp.ndarray:
+        """Greedy (or sampled) continuation; prompt is fed token-by-token
+        through the decode path (exactly the serve_step the dry-run lowers)."""
+        cfg = self.model.cfg
+        B, S = prompts.shape
+        state = self.model.init_decode_state(self.params, B, S + max_new)
+        key = jax.random.key(seed)
+        # prompt phase
+        last_logits = None
+        for t in range(S):
+            state, last_logits = self._decode(self.params, state, prompts[:, t : t + 1])
+        outs = []
+        cur = None
+        for i in range(max_new):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                cur = jax.random.categorical(sub, last_logits / temperature)[:, None]
+            else:
+                cur = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+            outs.append(cur)
+            state, last_logits = self._decode(self.params, state, cur)
+        return jnp.concatenate(outs, axis=1)

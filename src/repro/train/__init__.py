@@ -1,0 +1,3 @@
+"""Training substrate: AdamW, schedules, train-step factory."""
+from repro.train.optim import AdamWConfig, AdamWState, init, lr_at, update
+from repro.train.step import make_eval_step, make_train_step

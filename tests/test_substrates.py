@@ -1,0 +1,199 @@
+"""Substrate tests: optimizer, data determinism, checkpoint/restart, FT."""
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore, save
+from repro.data import CorpusConfig, LMDataConfig, host_slice, lm_batch, make_corpus, make_queries
+from repro.ft import FleetMonitor, RescalePlan, StepTimer, StragglerConfig, plan_rescale
+from repro.models import ModelConfig, get_model
+from repro.train import AdamWConfig, make_train_step, optim
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_matches_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                      grad_clip=0.0, warmup_steps=0, total_steps=10,
+                      schedule="constant")
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    st = optim.init(cfg, p)
+    new_p, new_st, _ = optim.update(cfg, st, p, g)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.05 * np.asarray(g["w"]) ** 2
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.95)
+    expect = np.asarray(p["w"]) - 1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.1 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-6)
+
+
+def test_grad_clip():
+    cfg = AdamWConfig(grad_clip=1.0, warmup_steps=0, schedule="constant")
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full((4,), 100.0)}
+    st = optim.init(cfg, p)
+    _, _, stats = optim.update(cfg, st, p, g)
+    assert float(stats["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_lr_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule="cosine")
+    assert float(optim.lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert float(optim.lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(optim.lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation over microbatches == single big batch step."""
+    cfg = ModelConfig(family="decoder", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32, remat=False)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=0, schedule="constant")
+    b = {"tokens": jax.random.randint(jax.random.key(1), (4, 8), 0, 64),
+         "labels": jax.random.randint(jax.random.key(2), (4, 8), 0, 64),
+         "mask": jnp.ones((4, 8))}
+    s1 = make_train_step(model, ocfg, microbatches=1, donate=False)
+    s2 = make_train_step(model, ocfg, microbatches=2, donate=False)
+    p1, _, m1 = s1(params, optim.init(ocfg, params), b)
+    p2, _, m2 = s2(params, optim.init(ocfg, params), b)
+    for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)
+
+
+# ---------------------------------------------------------------- data
+def test_lm_batch_deterministic():
+    cfg = LMDataConfig(vocab=100, batch=4, seq=16, seed=7)
+    a = lm_batch(cfg, 5)
+    b = lm_batch(cfg, 5)
+    c = lm_batch(cfg, 6)
+    assert bool(jnp.array_equal(a["tokens"], b["tokens"]))
+    assert not bool(jnp.array_equal(a["tokens"], c["tokens"]))
+    assert bool(jnp.array_equal(a["labels"][:, :-1], a["tokens"][:, 1:]))
+
+
+def test_host_slice_partition():
+    cfg = LMDataConfig(vocab=100, batch=8, seq=4)
+    b = lm_batch(cfg, 0)
+    parts = [host_slice(b, i, 4) for i in range(4)]
+    recon = jnp.concatenate([p["tokens"] for p in parts])
+    assert bool(jnp.array_equal(recon, b["tokens"]))
+
+
+def test_corpus_and_workloads():
+    ccfg = CorpusConfig(n=500, dim=16, seed=3)
+    x, ints = make_corpus(ccfg)
+    assert x.shape == (500, 16) and ints.shape == (500, 2)
+    assert bool(jnp.all(ints[:, 0] <= ints[:, 1]))
+    for w in ("uniform", "short", "long", "mixed", "point"):
+        qv, qi = make_queries(ccfg, 20, workload=w)
+        assert qv.shape == (20, 16)
+        assert bool(jnp.all(qi[:, 0] <= qi[:, 1]))
+    _, qs = make_queries(ccfg, 20, workload="short")
+    _, ql = make_queries(ccfg, 20, workload="long")
+    assert float((qs[:, 1] - qs[:, 0]).mean()) < float((ql[:, 1] - ql[:, 0]).mean())
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_ckpt_roundtrip_and_prune(tmp_path):
+    cfg = ModelConfig(family="decoder", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab=32, dtype=jnp.float32)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    ocfg = AdamWConfig()
+    ostate = optim.init(ocfg, params)
+    for s in (1, 2, 3, 4):
+        save(tmp_path, s, params, ostate, data_cursor=s, keep=2)
+    assert latest_step(tmp_path) == 4
+    # pruned to keep=2
+    import pathlib
+
+    steps = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert len(steps) == 2
+    rp, ro, meta = restore(tmp_path, params_template=model.shapes(), opt_template=ostate)
+    assert meta["data_cursor"] == 4
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rp)):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_async_checkpointer(tmp_path):
+    cfg = ModelConfig(family="decoder", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab=32, dtype=jnp.float32)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    ac = AsyncCheckpointer(tmp_path, keep=3)
+    ac.save(10, params)
+    ac.save(20, params)   # waits for the first
+    ac.wait()
+    assert latest_step(tmp_path) == 20
+
+
+def test_restart_determinism(tmp_path):
+    """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
+    cfg = ModelConfig(family="decoder", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab=64, dtype=jnp.float32, remat=False)
+    model = get_model(cfg)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=0, schedule="constant")
+    dcfg = LMDataConfig(vocab=64, batch=4, seq=8)
+    step = make_train_step(model, ocfg, donate=False)
+
+    p = model.init(jax.random.key(0))
+    o = optim.init(ocfg, p)
+    for s in range(6):
+        p, o, _ = step(p, o, lm_batch(dcfg, s))
+    straight = p
+
+    p = model.init(jax.random.key(0))
+    o = optim.init(ocfg, p)
+    for s in range(3):
+        p, o, _ = step(p, o, lm_batch(dcfg, s))
+    save(tmp_path, 3, p, o, data_cursor=3)
+    rp, ro, meta = restore(tmp_path, params_template=model.shapes(), opt_template=o)
+    p, o = rp, ro
+    for s in range(meta["data_cursor"], 6):
+        p, o, _ = step(p, o, lm_batch(dcfg, s))
+    for a, b in zip(jax.tree.leaves(straight), jax.tree.leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------- fault tol.
+def test_straggler_detection():
+    t = StepTimer(StragglerConfig(window=16, z_thresh=4.0))
+    for _ in range(16):
+        t.record(1.0 + np.random.default_rng(0).normal() * 0.01)
+    assert not t.is_straggling()
+    for _ in range(8):
+        t.record(3.0)
+    assert t.is_straggling()
+
+
+def test_fleet_monitor():
+    m = FleetMonitor(4)
+    rng = np.random.default_rng(1)
+    for s in range(20):
+        for w in range(4):
+            m.record(w, 1.0 + rng.normal() * 0.01 + (2.0 if w == 2 else 0.0))
+    assert m.stragglers() == [2]
+
+
+def test_rescale_plans():
+    p = plan_rescale(512, model_parallel=16, pods=2)
+    assert p.mesh_shape == (2, 16, 16)
+    # half capacity: shrink data per pod (keeps both pods' fast domains)
+    p = plan_rescale(256, model_parallel=16, pods=2)
+    assert math.prod(p.mesh_shape) == 256 and p.mesh_shape[-1] == 16
+    p = plan_rescale(384, model_parallel=16, pods=2)  # lost 8 hosts of pod 2
+    assert math.prod(p.mesh_shape) == 384
+    with pytest.raises(ValueError):
+        plan_rescale(100, model_parallel=16)
+
+
+def test_compression_ratio():
+    from repro.distributed import compression_ratio
+
+    assert compression_ratio(1 << 20) > 1.9
