@@ -29,6 +29,7 @@ def main(argv=None) -> None:
         ("sensitivity", lambda: tables.bench_sensitivity(n=1200 if args.quick else 2000)),
         ("scalability", lambda: tables.bench_scalability(
             sizes=(500, 1000, 2000) if args.quick else (1000, 2000, 4000, 8000))),
+        ("beam_sweep", lambda: tables.bench_beam_sweep(**({"n": n} if n else {}))),
         ("kernels", tables.bench_kernels),
         ("lm_steps", tables.bench_lm_steps),
     ]

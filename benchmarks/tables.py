@@ -149,6 +149,54 @@ def bench_scalability(sizes=(1000, 2000, 4000, 8000)):
     return rows
 
 
+# ------------------------------------------------- fused multi-expansion sweep
+def bench_beam_sweep(n=common.N_DEFAULT):
+    """QPS-vs-recall of the fused multi-expansion pipeline vs the legacy
+    argsort loop, over all four semantics (DESIGN.md §8).
+
+    Derived column reports recall, QPS, mean expansions, and the analytic
+    merge-comparator cost per expansion — the fused path must be strictly
+    below legacy (no full ``(ef+M)`` argsort in the hot loop).
+
+    CPU wall-clock note: the fused pipeline is batch-synchronous and
+    lane-parallel (TPU-shaped); on CPU its while_loop runs to the slowest
+    query and the comparator network gets no vector units, so legacy wins
+    wall-clock here.  The comparator model is the hardware-independent
+    signal; per-shape QPS crossover is a TPU measurement (DESIGN.md §6).
+    """
+    from repro.kernels.beam_merge import merge_comparator_count
+
+    rows = []
+    ug = common.ug_index(n)
+    qv, qi = common.queries("uniform", n=n)
+    _, qpoint = common.queries("point", n=n)
+    M = ug.graph.nbrs.shape[1]
+    width = 4
+    for sem, q in [
+        (Semantics.IF, qi), (Semantics.IS, qi),
+        (Semantics.RS, qpoint), (Semantics.RF, qi),
+    ]:
+        for ef in (32, 96):
+            gt = ug.ground_truth(qv, q, sem=sem, k=10)
+            for backend in ("legacy", "xla"):
+                w = 1 if backend == "legacy" else width
+                dt, res = common.timed(
+                    lambda: ug.search(qv, q, sem=sem, ef=ef, k=10,
+                                      backend=backend, width=w),
+                    iters=1,
+                )
+                r = recall(res, gt)
+                cmps = merge_comparator_count(
+                    ef, M, width=w, fused=backend != "legacy")
+                rows.append(common.row(
+                    f"beam_{sem.value.lower()}_{backend}_ef{ef}",
+                    1e6 * dt / qv.shape[0],
+                    f"recall={r:.3f} qps={qv.shape[0]/dt:.0f} "
+                    f"hops={float(res.steps.mean()):.1f} "
+                    f"merge_cmp_per_expansion={cmps:.0f}"))
+    return rows
+
+
 # ---------------------------------------------------------------- kernels
 def bench_kernels():
     """Pallas kernels (interpret mode on CPU — relative numbers only) vs jnp."""

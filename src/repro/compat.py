@@ -1,0 +1,30 @@
+"""Version-tolerance shims for jax APIs that moved between releases.
+
+The repo targets current jax (`jax.shard_map`, `jax.sharding.AxisType`) but
+must stay runnable on the 0.4.x CPU containers used for CI, where shard_map
+still lives in ``jax.experimental`` and takes ``check_rep``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_old
+
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` with the classic ``psum(1, axis)`` fallback
+    (which constant-folds to the static mesh-axis size)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)

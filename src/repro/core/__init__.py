@@ -3,7 +3,7 @@ index) implemented as composable JAX modules.  See DESIGN.md §1-2."""
 from repro.core.intervals import FLAG_BOTH, FLAG_IF, FLAG_IS, Semantics
 from repro.core.build import UGConfig, build_ug
 from repro.core.exact import DenseGraph, build_exact, greedy_monotonic_path
-from repro.core.entry import EntryIndex, build_entry_index, get_entry
+from repro.core.entry import EntryIndex, build_entry_index, get_entry, get_entry_batch
 from repro.core.index import UGIndex, recall
 from repro.core.search import SearchResult, beam_search, brute_force, search
 
@@ -11,5 +11,6 @@ __all__ = [
     "FLAG_BOTH", "FLAG_IF", "FLAG_IS", "Semantics",
     "UGConfig", "build_ug", "DenseGraph", "build_exact",
     "greedy_monotonic_path", "EntryIndex", "build_entry_index", "get_entry",
+    "get_entry_batch",
     "UGIndex", "recall", "SearchResult", "beam_search", "brute_force", "search",
 ]

@@ -93,3 +93,44 @@ def get_entry(
     ic = jnp.clip(i, 0, n - 1)
     ok = ok & (eidx.prefmax_r_val[ic] >= qr)
     return jnp.where(ok, eidx.prefmax_r_id[ic], -1).astype(jnp.int32)
+
+
+def get_entry_batch(
+    eidx: EntryIndex, q_interval: jnp.ndarray, sem: iv.Semantics, width: int = 1
+) -> jnp.ndarray:
+    """Widened Alg. 5: up to ``width`` *distinct* valid entries per query.
+
+    The multi-expansion search (DESIGN.md §8) seeds its initial frontier with
+    several entry nodes so the first fused step already expands ``W`` nodes.
+    Lemma 4.3 generalizes position-wise: for an IF query, *every* position
+    ``p ≥ i`` of the left-endpoint order whose suffix-min right endpoint is
+    ``≤ q.r`` certifies a valid entry (that arg node has ``l ≥ l_sorted[p] ≥
+    q.l``); dually for IS with the prefix-max over ``p ≤ i``.  Adjacent
+    positions often share an arg node, so duplicates are masked to ``-1``
+    (first occurrence kept).  Column 0 equals :func:`get_entry` exactly.
+
+    Returns (..., width) int32, ``-1``-padded.
+    """
+    width = max(int(width), 1)
+    n = eidx.l_sorted.shape[0]
+    ql = q_interval[..., 0]
+    qr = q_interval[..., 1]
+    offs = jnp.arange(width, dtype=jnp.int32)
+    if sem in (iv.Semantics.IF, iv.Semantics.RF):
+        i = jnp.searchsorted(eidx.l_sorted, ql, side="left")
+        pos = i[..., None] + offs
+        ok = pos < n
+        pc = jnp.clip(pos, 0, n - 1)
+        ok = ok & (eidx.suffmin_r_val[pc] <= qr[..., None])
+        ids = jnp.where(ok, eidx.suffmin_r_id[pc], -1)
+    else:
+        i = jnp.searchsorted(eidx.l_sorted, ql, side="right") - 1
+        pos = i[..., None] - offs
+        ok = pos >= 0
+        pc = jnp.clip(pos, 0, n - 1)
+        ok = ok & (eidx.prefmax_r_val[pc] >= qr[..., None])
+        ids = jnp.where(ok, eidx.prefmax_r_id[pc], -1)
+    dup = (ids[..., :, None] == ids[..., None, :]) & (ids[..., None, :] >= 0)
+    earlier = offs[:, None] > offs[None, :]
+    ids = jnp.where(jnp.any(dup & earlier, axis=-1), -1, ids)
+    return ids.astype(jnp.int32)

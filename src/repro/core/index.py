@@ -20,6 +20,7 @@ from repro.core.build import UGConfig, build_ug
 from repro.core.entry import EntryIndex, build_entry_index, get_entry
 from repro.core.exact import DenseGraph
 from repro.core.search import SearchResult, beam_search, brute_force
+from repro.core.search import search as core_search
 
 
 @dataclasses.dataclass
@@ -62,12 +63,16 @@ class UGIndex:
         ef: int = 64,
         k: int = 10,
         max_steps: int = 0,
+        backend: str | None = None,
+        width: int = 4,
     ) -> SearchResult:
-        entry_ids = get_entry(self.entry, jnp.asarray(q_int), sem)
-        return beam_search(
+        """Alg. 5 + Alg. 4.  ``backend``/``width`` select the search pipeline
+        (fused multi-expansion by default; see core/search.py)."""
+        return core_search(
             self.x, self.intervals, self.graph.nbrs, self.graph.status,
-            entry_ids, jnp.asarray(q_v), jnp.asarray(q_int),
+            self.entry, jnp.asarray(q_v), jnp.asarray(q_int),
             sem=sem, ef=ef, k=k, max_steps=max_steps,
+            backend=backend, width=width,
         )
 
     def ground_truth(self, q_v, q_int, *, sem: iv.Semantics, k: int) -> SearchResult:

@@ -8,6 +8,18 @@ of the selected node in a single gather + matmul.  The search never leaves
 the query-valid subgraph — only neighbors whose semantic bit is set *and*
 whose interval satisfies the query predicate enter the beam (Alg. 4 lines
 11-20); structural heredity (Thm 4.1) is what makes this correct.
+
+Two generations of the hot loop live here (DESIGN.md §8):
+
+* ``backend="legacy"`` — the original per-query ``vmap`` loop: one node
+  expanded per step, full ``(ef + M)`` argsort per step;
+* ``backend="pallas" | "xla"`` — the fused multi-expansion pipeline: the
+  whole batch steps together, each step expands the ``W`` best unexpanded
+  frontier nodes per query, scores all ``W·M`` neighbors with one gather +
+  one batched matmul, and folds them into the sorted beam with the bitonic
+  partial-merge kernel (``kernels/beam_merge.py``) instead of an argsort.
+  The two fused backends run the identical comparator network and return
+  bit-identical ids; ``xla`` is the interpretable CPU-CI reference.
 """
 from __future__ import annotations
 
@@ -18,7 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import intervals as iv
-from repro.core.entry import EntryIndex, get_entry
+from repro.core.entry import EntryIndex, get_entry, get_entry_batch
+from repro.kernels import ops
+from repro.kernels.beam_merge import PAD_PAYLOAD, next_pow2
 
 
 class SearchResult(NamedTuple):
@@ -137,15 +151,140 @@ def _search_one(
     return beam_ids, beam_d, steps
 
 
+def _beam_search_fused(
+    x: jnp.ndarray,          # (n, d)
+    intervals: jnp.ndarray,  # (n, 2)
+    nbrs: jnp.ndarray,       # (n, M)
+    status: jnp.ndarray,     # (n, M) uint8
+    entry_ids: jnp.ndarray,  # (B, We) int32, -1 padded
+    q_v: jnp.ndarray,        # (B, d)
+    q_int: jnp.ndarray,      # (B, 2)
+    *,
+    sem_flag: int,
+    sem_is_filter: bool,
+    ef: int,
+    k: int,
+    max_steps: int,
+    width: int,
+    backend: str,
+) -> SearchResult:
+    """Fused multi-expansion Alg. 4 (DESIGN.md §8).
+
+    The beam is ``E = next_pow2(ef)`` wide (padded with ``+inf``/``-1``) and
+    kept ascending under the total order ``(dist, payload)``; each payload
+    packs ``id << 1 | expanded``.  Every step the ``W`` best unexpanded
+    entries are expanded at once; rows whose frontier is exhausted are
+    natural no-ops, so the batch shares one ``while_loop``.
+    """
+    n, d = x.shape
+    M = nbrs.shape[1]
+    B = q_v.shape[0]
+    W = max(min(width, ef), 1)
+    E = next_pow2(ef)
+    C = W * M
+    nwords = (n + 31) // 32
+
+    q32 = q_v.astype(jnp.float32)
+    qn = jnp.sum(q32 * q32, axis=-1)                       # (B,)
+    xn = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)      # (n,)
+
+    bitmap_test = jax.vmap(_bitmap_test)
+    bitmap_set = jax.vmap(_bitmap_set)
+
+    def score(ids_c, valid):
+        """One gather + one batched matmul: ‖q−x‖² = ‖x‖² + ‖q‖² − 2·x·q."""
+        rows = x[ids_c].astype(jnp.float32)                # (B, C, d) gather
+        ip = jnp.einsum("bcd,bd->bc", rows, q32)
+        dist = jnp.maximum(xn[ids_c] + qn[:, None] - 2.0 * ip, 0.0)
+        return jnp.where(valid, dist, jnp.inf)
+
+    def predicate(obj_int):
+        if sem_is_filter:
+            return iv.contains(q_int[:, None, :], obj_int)
+        return iv.contains(obj_int, q_int[:, None, :])
+
+    def merge(beam_d, beam_p, cand_d, cand_p):
+        return ops.beam_merge(beam_d, beam_p, cand_d, cand_p, backend=backend)
+
+    def first_occurrence(ids_c, flag):
+        """Per row, keep ``flag`` only on the first candidate slot carrying
+        each id (duplicates across the W neighbor lists collapse to one)."""
+        same = ids_c[:, :, None] == ids_c[:, None, :]      # (B, C, C)
+        idx = jnp.arange(ids_c.shape[1], dtype=jnp.int32)
+        earlier = idx[:, None] > idx[None, :]
+        return flag & ~jnp.any(same & earlier[None] & flag[:, None, :], axis=2)
+
+    # ---- seed: merge the (deduped) entry batch into an empty beam
+    ent_valid = entry_ids >= 0
+    ent_c = jnp.clip(entry_ids, 0, n - 1)
+    ent_d = score(ent_c, ent_valid)
+    ent_p = jnp.where(ent_valid, ent_c << 1, PAD_PAYLOAD)
+    beam_d = jnp.full((B, E), jnp.inf, jnp.float32)
+    beam_p = jnp.full((B, E), PAD_PAYLOAD, jnp.int32)
+    beam_d, beam_p = merge(beam_d, beam_p, ent_d, ent_p)
+    visited = bitmap_set(jnp.zeros((B, nwords), jnp.uint32), ent_c, ent_valid)
+
+    rowi = jnp.arange(B, dtype=jnp.int32)[:, None]
+    iters_cap = (max_steps + W - 1) // W
+
+    def cond(state):
+        beam_d, beam_p, visited, steps, it = state
+        frontier = ((beam_p & 1) == 0) & jnp.isfinite(beam_d)
+        return jnp.any(frontier) & (it < iters_cap)
+
+    def body(state):
+        beam_d, beam_p, visited, steps, it = state
+        # ExtractMin_W: beam is sorted, so top_k picks the W best unexpanded.
+        sel_d = jnp.where((beam_p & 1) == 0, beam_d, jnp.inf)
+        neg, sel_idx = jax.lax.top_k(-sel_d, W)            # (B, W)
+        sel_ok = jnp.isfinite(-neg)
+        u = jnp.take_along_axis(beam_p >> 1, sel_idx, axis=-1)
+        mark = jnp.zeros((B, E), jnp.int32).at[rowi, sel_idx].max(
+            sel_ok.astype(jnp.int32)
+        )
+        beam_p = beam_p | mark
+
+        u_c = jnp.clip(u, 0, n - 1)
+        nb = jnp.where(sel_ok[..., None], nbrs[u_c], -1).reshape(B, C)
+        st = status[u_c].reshape(B, C)
+        present = nb >= 0
+        nb_c = jnp.clip(nb, 0, n - 1)
+        seen = bitmap_test(visited, nb_c) | ~present
+
+        sem_ok = (st & sem_flag) > 0
+        pred_ok = predicate(intervals[nb_c])
+        cand_ok = present & ~seen & sem_ok & pred_ok
+        # Same visited semantics as the legacy path (DESIGN.md §6): mark
+        # scored and node-dead candidates, never edge-masked ones.  Across
+        # the W lists one id may repeat — score/mark only its first
+        # *eligible* occurrence so the scatter-add stays an OR.
+        valid = first_occurrence(nb_c, cand_ok)
+        to_mark = first_occurrence(nb_c, present & ~seen & (cand_ok | ~pred_ok))
+        visited = bitmap_set(visited, nb_c, to_mark)
+
+        cand_d = score(nb_c, valid)
+        cand_p = jnp.where(valid, nb_c << 1, PAD_PAYLOAD)
+        beam_d, beam_p = merge(beam_d, beam_p, cand_d, cand_p)
+        steps = steps + jnp.sum(sel_ok, axis=-1, dtype=jnp.int32)
+        return beam_d, beam_p, visited, steps, it + 1
+
+    state = (beam_d, beam_p, visited, jnp.zeros((B,), jnp.int32), jnp.int32(0))
+    beam_d, beam_p, visited, steps, _ = jax.lax.while_loop(cond, body, state)
+
+    dist = beam_d[:, :k]                                   # beam is sorted
+    ids = jnp.where(jnp.isfinite(dist), beam_p[:, :k] >> 1, -1)
+    return SearchResult(ids, dist, steps)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("sem", "ef", "k", "max_steps")
+    jax.jit, static_argnames=("sem", "ef", "k", "max_steps", "backend", "width")
 )
 def beam_search(
     x: jnp.ndarray,
     intervals: jnp.ndarray,
     nbrs: jnp.ndarray,
     status: jnp.ndarray,
-    entry_ids: jnp.ndarray,   # (B,) int32 per-query entry node (Alg. 5 output)
+    entry_ids: jnp.ndarray,   # (B,) or (B, We) int32 entry node(s) (Alg. 5)
     q_v: jnp.ndarray,         # (B, d)
     q_int: jnp.ndarray,       # (B, 2)
     *,
@@ -153,10 +292,27 @@ def beam_search(
     ef: int,
     k: int,
     max_steps: int = 0,
+    backend: str | None = None,
+    width: int = 4,
 ) -> SearchResult:
-    """Batched Alg. 4.  ``max_steps=0`` derives a generous default (8·ef+32)."""
+    """Batched Alg. 4.  ``max_steps=0`` derives a generous default (8·ef+32).
+
+    ``backend`` selects the hot-loop implementation: ``"pallas"`` /
+    ``"xla"`` are the fused multi-expansion pipeline (bit-identical to each
+    other; default — pallas on TPU, xla on CPU), ``"legacy"`` the original
+    one-node-per-step argsort loop.  ``width`` is the fused frontier width W.
+    """
     steps_cap = max_steps if max_steps > 0 else 8 * ef + 32
     sem_is_filter = sem in (iv.Semantics.IF, iv.Semantics.RF)
+    if backend != "legacy":
+        backend = ops.resolve_backend(backend)
+        ent = entry_ids[:, None] if entry_ids.ndim == 1 else entry_ids
+        return _beam_search_fused(
+            x, intervals, nbrs, status, ent, q_v, q_int,
+            sem_flag=sem.flag, sem_is_filter=sem_is_filter,
+            ef=ef, k=k, max_steps=steps_cap, width=width, backend=backend,
+        )
+    entry_one = entry_ids if entry_ids.ndim == 1 else entry_ids[:, 0]
     run = jax.vmap(
         lambda qv, qi, s: _search_one(
             qv, qi, s, x, intervals, nbrs, status,
@@ -164,7 +320,7 @@ def beam_search(
             ef=ef, max_steps=steps_cap,
         )
     )
-    beam_ids, beam_d, steps = run(q_v, q_int, entry_ids)
+    beam_ids, beam_d, steps = run(q_v, q_int, entry_one)
     top_d, top_i = jax.lax.top_k(-beam_d, k)
     ids = jnp.take_along_axis(beam_ids, top_i, axis=-1)
     dist = -top_d
@@ -185,12 +341,22 @@ def search(
     ef: int,
     k: int,
     max_steps: int = 0,
+    backend: str | None = None,
+    width: int = 4,
 ) -> SearchResult:
-    """Entry acquisition (Alg. 5) + interval-aware beam search (Alg. 4)."""
-    entry_ids = get_entry(eidx, q_int, sem)
+    """Entry acquisition (Alg. 5) + interval-aware beam search (Alg. 4).
+
+    The fused backends seed the beam with a ``width``-wide entry batch
+    (widened Alg. 5) so the very first step already expands ``W`` nodes.
+    """
+    if backend == "legacy":
+        entry_ids = get_entry(eidx, q_int, sem)
+    else:
+        entry_ids = get_entry_batch(eidx, q_int, sem, width=width)
     return beam_search(
         x, intervals, nbrs, status, entry_ids, q_v, q_int,
         sem=sem, ef=ef, k=k, max_steps=max_steps,
+        backend=backend, width=width,
     )
 
 

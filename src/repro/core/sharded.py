@@ -32,8 +32,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import intervals as iv
 from repro.core.candidates import merge_topk
-from repro.core.entry import build_entry_index, get_entry
+from repro.core.entry import build_entry_index, get_entry, get_entry_batch
 from repro.core.search import beam_search
+
+from repro import compat
+from repro.compat import shard_map
 
 
 class ShardedIndexArrays(NamedTuple):
@@ -74,6 +77,8 @@ def make_sharded_search_fn(
     ef: int = 64,
     k: int = 10,
     hierarchical: bool = True,
+    backend: str | None = None,
+    width: int = 4,
 ):
     """Build the jittable sharded search step.
 
@@ -81,6 +86,8 @@ def make_sharded_search_fn(
     the per-shard top-k are merged across the index axes.  With
     ``hierarchical=True`` and 2 index axes (pod, data), the merge reduces
     intra-pod first so only ``k`` candidates per pod cross the pod axis.
+    ``backend``/``width`` select the shard-local search pipeline (fused
+    multi-expansion by default; see core/search.py).
     """
     index_axes = tuple(index_axes)
 
@@ -88,9 +95,13 @@ def make_sharded_search_fn(
         # Padded rows (gids < 0) are masked out of the entry structure so a
         # pad can never be returned as an entry node (Lemma 4.3 soundness).
         eidx = build_entry_index(ints, node_mask=gids >= 0)
-        entry = get_entry(eidx, q_int, sem)
+        if backend == "legacy":
+            entry = get_entry(eidx, q_int, sem)
+        else:
+            entry = get_entry_batch(eidx, q_int, sem, width=width)
         res = beam_search(
-            x, ints, nbrs, status, entry, q_v, q_int, sem=sem, ef=ef, k=k
+            x, ints, nbrs, status, entry, q_v, q_int, sem=sem, ef=ef, k=k,
+            backend=backend, width=width,
         )
         nloc = x.shape[0]
         g = jnp.where(res.ids >= 0, gids[jnp.clip(res.ids, 0, nloc - 1)], -1)
@@ -123,7 +134,7 @@ def make_sharded_search_fn(
 
     row = P(tuple(index_axes))
     rep = P()
-    fn = jax.shard_map(
+    fn = shard_map(
         sharded,
         mesh=mesh,
         in_specs=(row, row, row, row, row, rep, rep),
@@ -148,7 +159,7 @@ def make_ring_knn_fn(mesh: Mesh, *, axis: str = "data", k: int = 32):
 
     def ring_knn(x, gids):
         nloc = x.shape[0]
-        size = jax.lax.axis_size(axis)
+        size = compat.axis_size(axis)
         me = jax.lax.axis_index(axis)
         perm = [(i, (i + 1) % size) for i in range(size)]
 
@@ -179,7 +190,7 @@ def make_ring_knn_fn(mesh: Mesh, *, axis: str = "data", k: int = 32):
         return best_i, best_d
 
     row = P((axis,))
-    fn = jax.shard_map(
+    fn = shard_map(
         ring_knn, mesh=mesh, in_specs=(row, row), out_specs=(row, row),
         check_vma=False,
     )

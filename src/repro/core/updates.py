@@ -5,9 +5,17 @@ maintenance" (§2.3); the unified graph makes insertion local: a new object
 needs (1) candidates — its spatial KNN within the existing corpus plus
 interval-order neighbors, exactly Alg. 1 restricted to one row; (2) one
 ``UnifiedPrune`` pass for its own out-edges; (3) reverse-edge offers — the
-new node is appended to its neighbors' lists and each touched node gets a
-bounded local re-prune (their candidate pool ∪ {new}), which preserves the
-per-semantics degree budgets.
+new node is appended into *free slots* of its neighbors' lists under the
+per-semantics degree budgets, leaving every existing edge untouched.
+
+Step (3) deliberately does NOT re-prune the touched nodes: a fresh
+``UnifiedPrune`` over (current neighbors ∪ new) forgets the repair edges
+Alg. 2 added during the full build and measurably degrades old-query recall
+(IS recall dropped ~0.3 when we re-pruned wholesale).  Appending is always
+*sound* — search masks every traversed edge by the target's own semantic
+bit and predicate, so extra edges can only add connectivity; witness
+pruning is a degree optimization, not a correctness condition.  The IS bit
+is only set when ``I_u ∩ I_new ≠ ∅`` (Alg. 3 lines 7-8).
 
 Entry arrays are rebuilt lazily (O(n log n), amortized over a batch of
 inserts).  This matches the paper's forward-looking maintenance story
@@ -21,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import intervals as ivm
 from repro.core.build import UGConfig
 from repro.core.candidates import merge_topk
 from repro.core.entry import build_entry_index
@@ -85,32 +94,37 @@ def insert(index: UGIndex, new_x, new_intervals) -> UGIndex:
     nbrs = jnp.concatenate([index.graph.nbrs, new_nbrs])
     stat = jnp.concatenate([index.graph.status, new_stat])
 
-    # ---- (3) reverse offers: re-prune nodes the new objects point to
-    touched = np.unique(np.asarray(new_nbrs[new_nbrs >= 0]))
-    if touched.size:
-        t_ids = jnp.asarray(touched, jnp.int32)
-        # pool = current neighbors ∪ all new ids (bounded)
-        pool = jnp.concatenate(
-            [nbrs[t_ids], jnp.broadcast_to(new_ids, (t_ids.shape[0], b))], axis=1
-        )
-        r2 = unified_prune(
-            t_ids, pool, x_all, iv_all,
-            m_if=cfg.max_edges_if, m_is=cfg.max_edges_is,
-            alpha=cfg.alpha, unified=cfg.unified,
-        )
-        score2 = jnp.where(r2.status > 0, r2.dist, jnp.inf)
-        sel2 = jnp.argsort(score2, axis=1)[:, :m_cols]
-        nb2 = jnp.where(
-            jnp.isfinite(jnp.take_along_axis(score2, sel2, axis=1)),
-            jnp.take_along_axis(r2.order, sel2, axis=1), -1,
-        )
-        st2 = jnp.where(nb2 >= 0, jnp.take_along_axis(r2.status, sel2, axis=1), 0)
-        if nb2.shape[1] < m_cols:
-            extra = m_cols - nb2.shape[1]
-            nb2 = jnp.pad(nb2, ((0, 0), (0, extra)), constant_values=-1)
-            st2 = jnp.pad(st2, ((0, 0), (0, extra)))
-        nbrs = nbrs.at[t_ids].set(nb2[:, :m_cols])
-        stat = stat.at[t_ids].set(st2[:, :m_cols])
+    # ---- (3) reverse offers: append u -> new into free slots under budgets
+    nbrs_np = np.asarray(nbrs).copy()
+    stat_np = np.asarray(stat).copy()
+    iv_np = np.asarray(iv_all)
+    new_nbrs_np = np.asarray(new_nbrs)
+    for j in range(b):
+        nid = n_old + j
+        for v in new_nbrs_np[j]:
+            if v < 0:
+                continue
+            u = int(v)
+            row = nbrs_np[u]
+            if nid in row:
+                continue
+            free = np.flatnonzero(row < 0)
+            if free.size == 0:
+                continue
+            cnt_if = int(((stat_np[u] & ivm.FLAG_IF) > 0).sum())
+            cnt_is = int(((stat_np[u] & ivm.FLAG_IS) > 0).sum())
+            bits = 0
+            if cnt_if < cfg.max_edges_if:
+                bits |= ivm.FLAG_IF
+            overlap = max(iv_np[u, 0], iv_np[nid, 0]) <= min(iv_np[u, 1], iv_np[nid, 1])
+            if cnt_is < cfg.max_edges_is and overlap:
+                bits |= ivm.FLAG_IS
+            if bits == 0:
+                continue
+            nbrs_np[u, free[0]] = nid
+            stat_np[u, free[0]] = bits
+    nbrs = jnp.asarray(nbrs_np)
+    stat = jnp.asarray(stat_np)
 
     graph = DenseGraph(nbrs, stat)
     return dataclasses.replace(

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_forward(
     mesh: Mesh,
@@ -79,7 +81,7 @@ def pipeline_forward(
         )
         return outs
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axis)),
         out_specs=P(),

@@ -8,8 +8,18 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import beam_merge as beam_merge_mod
 from repro.kernels import fused_scan, gather_dist, l2dist
 from repro.kernels.util import on_cpu
+
+
+def resolve_backend(backend: str | None) -> str:
+    """Default kernel backend: Pallas on TPU, plain-jnp XLA on CPU CI."""
+    if backend is None:
+        return "xla" if on_cpu() else "pallas"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"unknown kernel backend {backend!r}")
+    return backend
 
 
 def pairwise_sq_dist(q: jnp.ndarray, x: jnp.ndarray, **kw) -> jnp.ndarray:
@@ -36,3 +46,17 @@ def filtered_topk(
 def gather_sq_dist(x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     """Beam-expansion scoring via scalar-prefetch row gather."""
     return gather_dist.gather_sq_dist(x, idx, q, interpret=on_cpu())
+
+
+def beam_merge(beam_d, beam_p, cand_d, cand_p, *, backend: str | None = None):
+    """Bitonic partial merge of scored candidates into the sorted ef-beam.
+
+    Both backends run the identical compare-exchange network (bit-identical
+    outputs): ``pallas`` through ``pallas_call`` (interpret on CPU),
+    ``xla`` as plain traced jnp.
+    """
+    if resolve_backend(backend) == "xla":
+        return beam_merge_mod.beam_merge_xla(beam_d, beam_p, cand_d, cand_p)
+    return beam_merge_mod.beam_merge(
+        beam_d, beam_p, cand_d, cand_p, interpret=on_cpu()
+    )

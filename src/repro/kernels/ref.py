@@ -46,6 +46,24 @@ def filtered_topk(
     return vals, idx.astype(jnp.int32)
 
 
+def beam_merge(beam_d, beam_p, cand_d, cand_p):
+    """Sorted-beam partial merge oracle: keep the ``E`` smallest of the
+    beam ∪ candidate union under the total order ``(dist, payload)``.
+
+    ``lexsort`` with the payload as tie-break realizes the exact total order
+    of the bitonic network, so the oracle is bit-identical to both kernel
+    backends (not merely set-equal).
+    """
+    E = beam_d.shape[-1]
+    d = jnp.concatenate([beam_d, cand_d], axis=-1)
+    p = jnp.concatenate([beam_p, cand_p], axis=-1)
+    order = jnp.lexsort((p, d), axis=-1)[..., :E]
+    return (
+        jnp.take_along_axis(d, order, axis=-1),
+        jnp.take_along_axis(p, order, axis=-1),
+    )
+
+
 def gather_sq_dist(x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     """Beam-expansion scoring: x (n, d), idx (B, M), q (B, d) -> (B, M).
 

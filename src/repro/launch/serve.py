@@ -34,6 +34,11 @@ def main(argv=None) -> int:
     ap.add_argument("--doc-len", type=int, default=32)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "xla", "legacy"],
+                    help="search pipeline (default: fused; pallas on TPU, xla on CPU)")
+    ap.add_argument("--width", type=int, default=4,
+                    help="fused multi-expansion frontier width W")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -63,6 +68,7 @@ def main(argv=None) -> int:
                     max_edges_is=32, iterations=3, repair_width=16,
                     exact_spatial=args.docs <= 4096)
     idx = UGIndex.build(x, intervals, ucfg)
+    engine.attach_index(idx, backend=args.backend, width=args.width)
     print(f"[serve] UG built in {idx.build_seconds:.1f}s "
           f"degree stats {idx.degree_stats()}")
 
@@ -80,7 +86,9 @@ def main(argv=None) -> int:
         (Semantics.RS, point), (Semantics.RF, wide),
     ]:
         t0 = time.perf_counter()
-        res = idx.search(qv, qint, sem=sem, ef=args.ef, k=args.k)
+        # qv was embedded once above; timing stays search-only and comparable
+        # across semantics (the embed cost is semantics-independent).
+        res = engine.retrieve(None, qint, sem=sem, ef=args.ef, k=args.k, q_v=qv)
         jax.block_until_ready(res.ids)
         dt = time.perf_counter() - t0
         gt = idx.ground_truth(qv, qint, sem=sem, k=args.k)

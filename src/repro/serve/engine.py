@@ -5,11 +5,14 @@
 requests, and exposes ``embed`` — mean-pooled final hidden states — which is
 what populates the paper's unified interval-aware index (the retrieval
 deployment in launch/serve.py: embed → UG search under IF/IS/RF/RS).
+``attach_index`` + ``retrieve`` close the loop: token batch in, interval-
+aware top-k out, routed through the fused multi-expansion search kernel
+(DESIGN.md §8) on the configured backend.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import TYPE_CHECKING, Any
 
 import jax
 import jax.numpy as jnp
@@ -17,11 +20,18 @@ import jax.numpy as jnp
 from repro.models.api import Model
 from repro.models import transformer as tr
 
+if TYPE_CHECKING:  # avoid a hard serve -> core import at module load
+    from repro.core import Semantics, UGIndex
+    from repro.core.search import SearchResult
+
 
 @dataclasses.dataclass
 class ServeEngine:
     model: Model
     params: Any
+    index: "UGIndex | None" = None
+    search_backend: str | None = None   # None = auto (pallas on TPU, xla CPU)
+    search_width: int = 4               # fused frontier width W
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -29,6 +39,42 @@ class ServeEngine:
             lambda p, s, t: self.model.decode_step(p, s, t)
         )
         self._embed = jax.jit(self._embed_impl)
+
+    # ---------------------------------------------------------- retrieval
+    def attach_index(
+        self, index: "UGIndex", *, backend: str | None = None, width: int | None = None
+    ) -> None:
+        """Attach a UGIndex; subsequent ``retrieve`` calls run against it."""
+        self.index = index
+        if backend is not None:
+            self.search_backend = backend
+        if width is not None:
+            self.search_width = width
+
+    def retrieve(
+        self,
+        query_tokens: jnp.ndarray | None,  # (B, S) int32; None with q_v=
+        q_int: jnp.ndarray,                # (B, 2) query validity intervals
+        *,
+        sem: "Semantics | None" = None,
+        ef: int = 64,
+        k: int = 10,
+        mask: jnp.ndarray | None = None,
+        q_v: jnp.ndarray | None = None,    # precomputed embeddings (skip embed)
+    ) -> "SearchResult":
+        """Embed the token batch (unless ``q_v`` is given) and run
+        interval-aware search (Alg. 5+4)."""
+        if self.index is None:
+            raise ValueError("no index attached; call attach_index() first")
+        from repro.core import Semantics
+
+        qv = q_v if q_v is not None else self.embed(query_tokens, mask)
+        return self.index.search(
+            qv, jnp.asarray(q_int),
+            sem=sem if sem is not None else Semantics.IF,
+            ef=ef, k=k,
+            backend=self.search_backend, width=self.search_width,
+        )
 
     # ------------------------------------------------------------- embed
     def _embed_impl(self, params, tokens, mask):

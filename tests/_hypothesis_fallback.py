@@ -1,0 +1,83 @@
+"""Tiny vendored stand-in for ``hypothesis`` (used when the real package is
+absent — e.g. the hermetic CI container).
+
+Only the surface the repo's property tests use is provided: ``given``,
+``settings`` and ``strategies.floats`` / ``strategies.integers``.  ``given``
+runs the test body over a deterministic sample: all corner combinations of
+each strategy's boundary values plus seeded pseudo-random draws, honoring
+``settings(max_examples=...)``.  It is *not* hypothesis — no shrinking, no
+database — but it keeps the invariant tests executable (and the suite
+collectable) with zero dependencies.  With hypothesis installed (see
+requirements-dev.txt) the real library is used instead; tests/conftest.py
+registers this module in ``sys.modules`` only on ImportError.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import struct
+
+
+def _f32(v: float) -> float:
+    """Round to the nearest float32-representable value (width=32 contract:
+    real hypothesis only emits representable floats, and tests rely on it)."""
+    return struct.unpack("f", struct.pack("f", v))[0]
+
+
+class _Strategy:
+    def __init__(self, corners, draw):
+        self.corners = corners      # boundary examples, always exercised
+        self.draw = draw            # rng -> random example
+
+
+def floats(min_value=0.0, max_value=1.0, allow_nan=False, allow_infinity=False,
+           width=64, **_ignored):
+    lo, hi = float(min_value), float(max_value)
+    conv = _f32 if width == 32 else float
+    corners = [conv(lo), conv(hi), conv((lo + hi) / 2.0)]
+    return _Strategy(corners, lambda rng: conv(rng.uniform(lo, hi)))
+
+
+def integers(min_value=0, max_value=100, **_ignored):
+    lo, hi = int(min_value), int(max_value)
+    corners = [lo, hi]
+    return _Strategy(corners, lambda rng: rng.randint(lo, hi))
+
+
+class strategies:
+    floats = staticmethod(floats)
+    integers = staticmethod(integers)
+
+
+def settings(max_examples: int = 50, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*fixture_args, **fixture_kw):
+            # @settings sits *above* @given in this repo, so the attribute
+            # lands on the outer wrapper — read it there at call time.
+            max_examples = getattr(runner, "_fallback_max_examples",
+                                   getattr(fn, "_fallback_max_examples", 50))
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            cases = list(itertools.islice(
+                itertools.product(*(s.corners for s in strats)), max_examples
+            ))
+            while len(cases) < max_examples:
+                cases.append(tuple(s.draw(rng) for s in strats))
+            for case in cases:
+                fn(*fixture_args, *case, **fixture_kw)
+        # Strategies fill the trailing params; expose only the leading
+        # (fixture) params to pytest, else it resolves a/b/c as fixtures.
+        params = list(inspect.signature(fn).parameters.values())
+        runner.__signature__ = inspect.Signature(params[: len(params) - len(strats)])
+        runner.hypothesis_fallback = True
+        return runner
+    return deco

@@ -1,4 +1,20 @@
-"""Shared fixtures: small deterministic corpora for the paper-core tests."""
+"""Shared fixtures: small deterministic corpora for the paper-core tests.
+
+Also makes ``hypothesis`` optional: when the real package is unavailable the
+vendored fallback (tests/_hypothesis_fallback.py) is registered under the
+same module name *before* test modules import it, so the property-based
+suites stay collectable and executable in hermetic environments.
+"""
+import sys
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ImportError:  # register the minimal vendored fallback
+    import _hypothesis_fallback  # tests/ is on sys.path (pytest rootdir)
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
+
 import jax
 import jax.numpy as jnp
 import pytest

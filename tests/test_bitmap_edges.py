@@ -1,0 +1,92 @@
+"""Edge cases for the visited bitmap and the NULL-entry search path.
+
+The bitmap replaces Alg. 4's visited hash-set with one uint32 word per 32
+nodes; its soundness relies on `_bitmap_set`'s scatter-*add* acting as an OR,
+which only holds when no bit is added twice.  These tests pin the boundary
+conditions: n not a multiple of 32, duplicate ids offered across steps, and
+the ``start = -1`` certified-NULL path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import intervals as iv
+from repro.core.exact import build_exact
+from repro.core.entry import build_entry_index
+from repro.core.search import _bitmap_set, _bitmap_test, beam_search, brute_force
+
+
+def test_bitmap_n_not_multiple_of_32():
+    n = 37                      # 2 words, 27 slack bits in the last word
+    nwords = (n + 31) // 32
+    bm = jnp.zeros((nwords,), jnp.uint32)
+    ids = jnp.asarray([0, 31, 32, 36], jnp.int32)
+    bm = _bitmap_set(bm, ids, jnp.ones((4,), bool))
+    assert bool(_bitmap_test(bm, ids).all())
+    others = jnp.asarray([1, 30, 33, 35], jnp.int32)
+    assert not bool(_bitmap_test(bm, others).any())
+
+
+def test_bitmap_duplicate_ids_across_steps():
+    """Re-offering an already-set id with fresh=~test is an exact no-op, so
+    add == or across any number of steps."""
+    n = 70
+    bm = jnp.zeros(((n + 31) // 32,), jnp.uint32)
+    step1 = jnp.asarray([3, 64, 69], jnp.int32)
+    bm = _bitmap_set(bm, step1, ~_bitmap_test(bm, step1))
+    before = np.asarray(bm).copy()
+    # step 2 offers duplicates of step 1 plus one new id
+    step2 = jnp.asarray([3, 69, 5], jnp.int32)
+    bm = _bitmap_set(bm, step2, ~_bitmap_test(bm, step2))
+    after = np.asarray(bm)
+    assert bool(_bitmap_test(bm, jnp.asarray([3, 64, 69, 5])).all())
+    # words holding only old ids unchanged (no double-add corruption)
+    assert after[2] == before[2]  # word of 64/69 also got 69 re-offered: equal
+    popcount = sum(bin(int(w)).count("1") for w in after)
+    assert popcount == 4
+
+
+def test_bitmap_set_respects_fresh_mask():
+    bm = jnp.zeros((2,), jnp.uint32)
+    ids = jnp.asarray([4, 4], jnp.int32)      # duplicate in one batch,
+    fresh = jnp.asarray([True, False])        # but only one marked fresh
+    bm = _bitmap_set(bm, ids, fresh)
+    assert int(np.asarray(bm)[0]) == 1 << 4
+
+
+@pytest.mark.parametrize("backend", ["legacy", "xla", "pallas"])
+def test_no_valid_entry_returns_all_invalid(backend, small_corpus):
+    """start = -1 (certified NULL): every slot -1 / +inf, zero steps."""
+    x, ints = small_corpus
+    g = build_exact(x, ints, unified=True)
+    qv = jnp.zeros((3, x.shape[1]))
+    entry = jnp.full((3,), -1, jnp.int32)
+    qi = jnp.asarray([[-5.0, 5.0]] * 3, jnp.float32)  # IS-impossible window
+    res = beam_search(x, ints, g.nbrs, g.status, entry, qv, qi,
+                      sem=iv.Semantics.IS, ef=16, k=5, backend=backend)
+    assert bool((res.ids == -1).all())
+    assert bool(jnp.isinf(res.dist).all())
+    assert bool((res.steps == 0).all())
+
+
+def test_duplicate_neighbors_within_fused_step(small_corpus):
+    """The exact URNG has heavily overlapping neighbor lists; expanding W=8
+    nodes at once must still dedup scoring (full recall, no repeated ids)."""
+    x, ints = small_corpus
+    g = build_exact(x, ints, unified=True)
+    eidx = build_entry_index(ints)
+    from repro.core.search import search
+    k1, k2 = jax.random.split(jax.random.key(17))
+    qv = jax.random.normal(k1, (16, x.shape[1]))
+    c = jax.random.uniform(k2, (16, 1))
+    qi = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
+    res = search(x, ints, g.nbrs, g.status, eidx, qv, qi,
+                 sem=iv.Semantics.IF, ef=32, k=10, backend="xla", width=8)
+    gt = brute_force(x, ints, qv, qi, sem=iv.Semantics.IF, k=10)
+    from repro.core.index import recall
+    assert recall(res, gt) == 1.0
+    ids = np.asarray(res.ids)
+    for row in ids:
+        real = [v for v in row if v >= 0]
+        assert len(real) == len(set(real)), row

@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import intervals as iv
 from repro.core.build import UGConfig
-from repro.core.entry import build_entry_index, get_entry
+from repro.core.entry import build_entry_index, get_entry, get_entry_batch
 from repro.core.exact import build_exact
 from repro.core.index import UGIndex, recall
 from repro.core.search import brute_force, search
@@ -46,6 +46,40 @@ def test_entry_lemma_4_3(ql, qr):
                 assert ints_np[e, 0] <= lo and ints_np[e, 1] >= hi
             else:
                 assert not any_valid
+
+
+@settings(max_examples=40, deadline=None)
+@given(unit, unit)
+def test_entry_batch_widened_lemma(ql, qr):
+    """Widened Alg. 5: every non-NULL id in the batch is a valid entry,
+    ids are distinct, and column 0 equals the single-entry result."""
+    k = jax.random.key(3)
+    ints = iv.sample_uniform_intervals(k, 500)
+    eidx = build_entry_index(ints)
+    lo, hi = min(ql, qr), max(ql, qr)
+    q = jnp.asarray([lo, hi], jnp.float32)
+    ints_np = np.asarray(ints)
+    for sem in (iv.Semantics.IF, iv.Semantics.IS):
+        batch = np.asarray(get_entry_batch(eidx, q, sem, width=6))
+        assert batch.shape == (6,)
+        assert int(batch[0]) == int(get_entry(eidx, q, sem))
+        real = [int(v) for v in batch if v >= 0]
+        assert len(real) == len(set(real))
+        for e in real:
+            if sem is iv.Semantics.IF:
+                assert ints_np[e, 0] >= lo and ints_np[e, 1] <= hi
+            else:
+                assert ints_np[e, 0] <= lo and ints_np[e, 1] >= hi
+
+
+def test_entry_batch_batched_queries(eidx_data):
+    """Batch axis broadcasting: (B, 2) query intervals -> (B, W) ids."""
+    ints, eidx = eidx_data
+    q = jnp.asarray([[0.0, 1.0], [0.4, 0.6], [2.0, 3.0]], jnp.float32)
+    out = get_entry_batch(eidx, q, iv.Semantics.IF, width=4)
+    assert out.shape == (3, 4)
+    assert int(out[0, 0]) >= 0         # whole domain: entry must exist
+    assert bool((out[2] == -1).all())  # out-of-range window: certified NULL
 
 
 def test_entry_masked(eidx_data):

@@ -88,6 +88,103 @@ def test_phi_is_witness_validity(a, b, c, d, e, f):
         assert bool(iv.contains(iw, inter))
 
 
+@settings(max_examples=40, deadline=None)
+@given(finite, finite, finite, finite)
+def test_hull_identities(a, b, c, d):
+    """Hull is idempotent, commutative, and the *least* upper bound."""
+    x, y = mk(a, b), mk(c, d)
+    h = iv.hull(x, y)
+    assert bool(jnp.array_equal(iv.hull(x, x), x))
+    assert bool(jnp.array_equal(h, iv.hull(y, x)))
+    # least: any interval containing both x and y contains hull(x, y)
+    z = iv.hull(h, mk(min(a, c) - 1.0, max(b, d) + 1.0))
+    assert bool(iv.contains(z, h))
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, finite, finite, finite)
+def test_intersection_identities(a, b, c, d):
+    """Intersection is idempotent, commutative, and the greatest lower bound."""
+    x, y = mk(a, b), mk(c, d)
+    inter = iv.intersection(x, y)
+    assert bool(jnp.array_equal(iv.intersection(x, x), x))
+    assert bool(jnp.array_equal(inter, iv.intersection(y, x)))
+    if not bool(iv.is_empty(inter)):
+        # greatest: any interval inside both x and y is inside x ∩ y
+        assert bool(iv.contains(x, inter)) and bool(iv.contains(y, inter))
+        assert bool(iv.contains(iv.hull(x, y), inter))
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, finite, finite, finite, finite, finite)
+def test_contains_partial_order(a, b, c, d, e, f):
+    """⊆ is reflexive and transitive on intervals."""
+    x, y, z = mk(a, b), mk(c, d), mk(e, f)
+    assert bool(iv.contains(x, x))
+    if bool(iv.contains(y, x)) and bool(iv.contains(z, y)):
+        assert bool(iv.contains(z, x))
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, finite, finite, finite, finite, finite)
+def test_phi_witness_duality(a, b, c, d, e, f):
+    """Φ_IF and Φ_IS are order-duals (Def. 3.1): Φ_IF bounds ``w`` above by
+    the *join* (hull) of u, v; Φ_IS bounds it below by the *meet*
+    (intersection), guarded on the meet existing."""
+    iu, ivv, iw = mk(a, b), mk(c, d), mk(e, f)
+    assert bool(iv.phi_if(iu, ivv, iw)) == bool(iv.contains(iv.hull(iu, ivv), iw))
+    inter = iv.intersection(iu, ivv)
+    expect_is = (not bool(iv.is_empty(inter))) and bool(iv.contains(iw, inter))
+    assert bool(iv.phi_is(iu, ivv, iw)) == expect_is
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, finite, finite)
+def test_phi_duality_on_points(u, v, w):
+    """On point intervals both witness conditions degenerate to betweenness:
+    Φ_IF([u],[v],[w]) ⇔ min(u,v) ≤ w ≤ max(u,v) ⇔ Φ_IS([w'],[v'],[u'])-style
+    meet condition with the roles of w and (u,v) swapped."""
+    pu, pv, pw = mk(u, u), mk(v, v), mk(w, w)
+    u32, v32, w32 = np.float32(u), np.float32(v), np.float32(w)
+    between = bool(min(u32, v32) <= w32 <= max(u32, v32))
+    assert bool(iv.phi_if(pu, pv, pw)) == between
+    # dual: point meets only exist for equal points, so Φ_IS degenerates to
+    # equality — the strictest instance of the meet lower bound
+    assert bool(iv.phi_is(pu, pv, pw)) == bool(u32 == v32 == w32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, finite, finite)
+def test_rf_if_equivalence_degenerate(a, ql, qr):
+    """predicate(RF) ≡ predicate(IF) — RF is IF after the point-interval
+    reduction (§2.1), for *any* object interval, degenerate or not."""
+    q = mk(ql, qr)
+    for obj in (mk(a, a), mk(a, a + 1.0)):
+        assert bool(iv.predicate(iv.Semantics.RF, obj, q)) == \
+            bool(iv.predicate(iv.Semantics.IF, obj, q))
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, finite, finite)
+def test_rs_is_equivalence_degenerate(t, l, r):
+    """predicate(RS) ≡ predicate(IS) under the point-query reduction."""
+    obj = mk(l, r)
+    for q in (mk(t, t), mk(t, t + 1.0)):
+        assert bool(iv.predicate(iv.Semantics.RS, obj, q)) == \
+            bool(iv.predicate(iv.Semantics.IS, obj, q))
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, finite, finite, finite)
+def test_query_valid_mask_matches_predicate(a, b, ql, qr):
+    obj = jnp.stack([mk(a, b), mk(b, a)], axis=0)
+    q = mk(ql, qr)
+    for sem in (iv.Semantics.IF, iv.Semantics.IS):
+        m = iv.query_valid_mask(sem, obj, q)
+        for row in range(2):
+            assert bool(m[row]) == bool(iv.predicate(sem, obj[row], q))
+
+
 def test_uniform_interval_model():
     import jax
 

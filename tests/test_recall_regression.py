@@ -1,0 +1,109 @@
+"""Recall regression harness for the unified index (ISSUE 1 acceptance).
+
+On synthetic corpora every search pipeline — the legacy single-expansion
+loop and both fused multi-expansion backends — must reach recall@10 ≥ 0.9
+against brute force for each of the four semantics, and the two fused
+backends must agree bit-for-bit on returned ids (same comparator network,
+different lowering).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Semantics, UGConfig, UGIndex, recall
+from repro.core import intervals as iv
+
+EF = 96
+K = 10
+BACKENDS = ("legacy", "xla", "pallas")
+
+
+@pytest.fixture(scope="module")
+def interval_index(medium_corpus):
+    """UG over uniform intervals — exercises IF / IS / RS."""
+    x, ints = medium_corpus
+    cfg = UGConfig(ef_spatial=32, ef_attribute=64, max_edges_if=32,
+                   max_edges_is=32, iterations=3, repair_width=16,
+                   exact_spatial=True, block=768)
+    return UGIndex.build(x, ints, cfg)
+
+
+@pytest.fixture(scope="module")
+def point_index(medium_corpus):
+    """UG over degenerate (point) object intervals — the RF special case."""
+    x, _ = medium_corpus
+    ints = iv.sample_point_intervals(jax.random.key(21), x.shape[0])
+    cfg = UGConfig(ef_spatial=32, ef_attribute=64, max_edges_if=32,
+                   max_edges_is=32, iterations=2, repair_width=16,
+                   exact_spatial=True, block=768)
+    return UGIndex.build(x, ints, cfg)
+
+
+@pytest.fixture(scope="module")
+def query_set(medium_corpus):
+    x, _ = medium_corpus
+    k1, k2 = jax.random.split(jax.random.key(31))
+    nq = 32
+    qv = jax.random.normal(k1, (nq, x.shape[1]))
+    c = jax.random.uniform(k2, (nq, 1))
+    window = jnp.concatenate(
+        [jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
+    point = jnp.concatenate([c, c], axis=1)
+    return qv, window, point
+
+
+def _cases(interval_index, point_index, query_set):
+    qv, window, point = query_set
+    return [
+        (Semantics.IF, interval_index, qv, window),
+        (Semantics.IS, interval_index, qv, window),
+        (Semantics.RS, interval_index, qv, point),
+        (Semantics.RF, point_index, qv, window),
+    ]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_recall_at_10_all_semantics(backend, interval_index, point_index, query_set):
+    for sem, idx, qv, qi in _cases(interval_index, point_index, query_set):
+        res = idx.search(qv, qi, sem=sem, ef=EF, k=K, backend=backend)
+        gt = idx.ground_truth(qv, qi, sem=sem, k=K)
+        r = recall(res, gt)
+        assert r >= 0.9, f"{sem} via {backend}: recall {r:.3f}"
+
+
+def test_fused_backends_bitwise_identical(interval_index, point_index, query_set):
+    """pallas (interpret) and xla run the same network: identical ids/dists."""
+    for sem, idx, qv, qi in _cases(interval_index, point_index, query_set):
+        rx = idx.search(qv, qi, sem=sem, ef=EF, k=K, backend="xla")
+        rp = idx.search(qv, qi, sem=sem, ef=EF, k=K, backend="pallas")
+        assert np.array_equal(np.asarray(rx.ids), np.asarray(rp.ids)), sem
+        assert np.array_equal(np.asarray(rx.dist), np.asarray(rp.dist)), sem
+        assert np.array_equal(np.asarray(rx.steps), np.asarray(rp.steps)), sem
+
+
+def test_fused_results_satisfy_predicate(interval_index, query_set):
+    """Fused search also never leaves the query-valid subgraph."""
+    qv, window, point = query_set
+    ints_np = np.asarray(interval_index.intervals)
+    for sem, qi in [(Semantics.IF, window), (Semantics.IS, window),
+                    (Semantics.RS, point)]:
+        res = interval_index.search(qv, qi, sem=sem, ef=EF, k=K, backend="xla")
+        ids = np.asarray(res.ids)
+        qn = np.asarray(qi)
+        for i in range(ids.shape[0]):
+            for v in ids[i]:
+                if v < 0:
+                    continue
+                ok = iv.predicate(sem, jnp.asarray(ints_np[v]), jnp.asarray(qn[i]))
+                assert bool(ok), (sem, i, int(v))
+
+
+def test_width_sweep_keeps_recall(interval_index, query_set):
+    """Multi-expansion width trades steps for parallelism, not recall."""
+    qv, window, _ = query_set
+    gt = interval_index.ground_truth(qv, window, sem=Semantics.IF, k=K)
+    for w in (0, 1, 2, 8):  # 0 clamps to 1 (entry batch included — regression)
+        res = interval_index.search(
+            qv, window, sem=Semantics.IF, ef=EF, k=K, backend="xla", width=w)
+        assert recall(res, gt) >= 0.9, w
