@@ -14,12 +14,17 @@ import traceback
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpora for CI regression output (implies --quick)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
     from benchmarks import tables
 
-    n = 2000 if args.quick else None
+    if args.smoke:
+        args.quick = True
+    n = (600 if args.smoke else 2000) if args.quick else None
+    build_sizes = (400,) if args.smoke else ((800, 1600) if args.quick else (1000, 2000, 4000))
     benches = [
         ("ifann", lambda: tables.bench_ifann(**({"n": n} if n else {}))),
         ("query_types", lambda: tables.bench_query_types(**({"n": n} if n else {}))),
@@ -30,6 +35,7 @@ def main(argv=None) -> None:
         ("scalability", lambda: tables.bench_scalability(
             sizes=(500, 1000, 2000) if args.quick else (1000, 2000, 4000, 8000))),
         ("beam_sweep", lambda: tables.bench_beam_sweep(**({"n": n} if n else {}))),
+        ("build", lambda: tables.bench_build(sizes=build_sizes)),
         ("kernels", tables.bench_kernels),
         ("lm_steps", tables.bench_lm_steps),
     ]

@@ -4,6 +4,7 @@ Each returns CSV-able rows: name, us_per_call, derived.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -12,6 +13,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import Semantics, UGConfig, UGIndex, recall
+from repro.core.build import build_ug
 from repro.core.search import brute_force
 from repro.data import CorpusConfig, make_corpus, make_queries
 
@@ -194,6 +196,59 @@ def bench_beam_sweep(n=common.N_DEFAULT):
                     f"recall={r:.3f} qps={qv.shape[0]/dt:.0f} "
                     f"hops={float(res.steps.mean()):.1f} "
                     f"merge_cmp_per_expansion={cmps:.0f}"))
+    return rows
+
+
+# ------------------------------------------------- construction-cost sweep
+def bench_build(sizes=(1000, 2000, 4000), backends=("legacy", "xla", "pallas")):
+    """Construction cost per prune backend vs n (DESIGN.md §9).
+
+    Reports wall-clock build seconds plus the traced peak single
+    intermediate of one pruning sweep — the fused backends must never
+    materialize a ``(B, C, C)`` Φ/distance tensor, which is asserted here
+    (the ISSUE-2 acceptance criterion), while ``legacy`` keeps the
+    quadratic tensors so the table quantifies exactly what fusion removes.
+    All backends build byte-identical graphs (test_prune_sweep.py), so the
+    derived column also carries a graph checksum as a cross-backend guard.
+    """
+    from repro.core.candidates import candidate_pool_width
+    from repro.kernels.prune_sweep import sweep_memory_profile
+
+    rows = []
+    cfg_base = common.UG_CFG
+    # Sweep-shape profile at the build's actual tile shape: cfg.block rows
+    # per lax.map tile; the widest candidate axis is the iteration-0 pool.
+    pool_c = candidate_pool_width(cfg_base.ef_spatial, cfg_base.ef_attribute)
+    profiles = {}
+    for backend in backends:
+        prof = sweep_memory_profile(
+            backend, B=cfg_base.block, C=pool_c,
+            d=common.DIM, m_if=cfg_base.max_edges_if, m_is=cfg_base.max_edges_is,
+        )
+        if backend != "legacy":
+            assert not prof["quadratic"], (
+                f"{backend} sweep materializes a (B, C, C) tensor")
+        profiles[backend] = prof
+        rows.append(common.row(
+            f"build_sweep_profile_{backend}", 0.0,
+            f"peak_intermediate_bytes={prof['peak_bytes']} "
+            f"phi_materialized={'yes' if prof['quadratic'] else 'no'}"))
+
+    for n in sizes:
+        x, ints = common.corpus(n)
+        for backend in backends:
+            cfg = dataclasses.replace(cfg_base, prune_backend=backend)
+            dt, graph = common.timed(
+                lambda: build_ug(jax.random.key(0), x, ints, cfg),
+                warmup=0, iters=1,
+            )
+            checksum = int(np.asarray(graph.nbrs, np.int64).sum()) \
+                + int(np.asarray(graph.status, np.int64).sum())
+            rows.append(common.row(
+                f"build_{backend}_n{n}", dt * 1e6,
+                f"seconds={dt:.1f} edges={int((np.asarray(graph.nbrs) >= 0).sum())} "
+                f"graph_checksum={checksum} "
+                f"peak_sweep_bytes={profiles[backend]['peak_bytes']}"))
     return rows
 
 

@@ -8,20 +8,28 @@ monotone continuation path through ``w`` can be explored next round).
 TPU reformulation: repair sets are fixed-width per-node buffers filled by a
 sort-by-witness + segment-rank scatter — no dynamic allocation; the pool
 merge is padded-concat + dedup handled inside ``unified_prune``.
+
+The full per-iteration sweep — blocked pruning over all ``n`` nodes plus the
+repair scatter — is one jitted program: the node axis is padded to a
+multiple of ``cfg.block`` and swept with ``lax.map`` (DESIGN.md §9), so the
+host never re-enters the dispatch path per block and the only device→host
+syncs in :func:`build_ug` are a single transfer at the end (degree stats for
+``progress`` + the trailing-column trim).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import intervals as iv
 from repro.core.candidates import generate_candidates
 from repro.core.exact import DenseGraph
 from repro.core.prune import unified_prune
+from repro.kernels.util import pad_rows, pad_to
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +51,7 @@ class UGConfig:
     nnd_iters: int = 6
     exact_spatial: bool = False     # exact KNN candidates (small n oracle)
     block: int = 1024               # nodes pruned per jitted block
+    prune_backend: str | None = None  # pallas | xla | legacy (None = platform)
 
 
 def scatter_repairs(
@@ -64,42 +73,61 @@ def scatter_repairs(
     return out[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "keep", "backend"))
 def _prune_all(
     x: jnp.ndarray,
     intervals: jnp.ndarray,
     cand: jnp.ndarray,
     cfg: UGConfig,
-    progress: Callable[[str], None] | None = None,
+    keep: int,
+    backend: str | None,
 ):
-    """One full pruning sweep (Alg. 2 lines 8-9) over all nodes, blocked."""
-    n = x.shape[0]
-    keep = cfg.max_edges_if + cfg.max_edges_is
-    keep = min(keep, cand.shape[1])
-    nbrs_l, stat_l, wpair_w, wpair_v = [], [], [], []
-    for s in range(0, n, cfg.block):
-        u = jnp.arange(s, min(s + cfg.block, n), dtype=jnp.int32)
+    """One full pruning sweep (Alg. 2 lines 8-9) over all nodes.
+
+    A single jitted ``lax.map`` over ``cfg.block``-row tiles: no host block
+    loop, no per-block dispatch.  Returns compacted neighbors/status plus the
+    flat repair pairs (w, v) for :func:`scatter_repairs`.
+    """
+    n, C = cand.shape
+    n_pad = pad_to(n, cfg.block)
+    ids = jnp.arange(n_pad, dtype=jnp.int32)
+    u_pad = jnp.where(ids < n, ids, 0)           # pad rows prune an empty pool
+    cand_pad = pad_rows(cand, n_pad, -1)
+    u_blocks = u_pad.reshape(-1, cfg.block)
+    cand_blocks = cand_pad.reshape(-1, cfg.block, C)
+
+    def one_block(args):
+        u, cb = args
         res = unified_prune(
-            u, cand[s : s + cfg.block], x, intervals,
+            u, cb, x, intervals,
             m_if=cfg.max_edges_if, m_is=cfg.max_edges_is,
-            alpha=cfg.alpha, unified=cfg.unified,
+            alpha=cfg.alpha, unified=cfg.unified, backend=backend,
         )
         # Compact retained neighbors to the front (ascending distance).
         score = jnp.where(res.status > 0, res.dist, jnp.inf)
         order = jnp.argsort(score, axis=-1)[:, :keep]
-        ids = jnp.take_along_axis(res.order, order, axis=-1)
-        st = jnp.take_along_axis(res.status, order, axis=-1)
+        ids_k = jnp.take_along_axis(res.order, order, axis=-1)
+        st_k = jnp.take_along_axis(res.status, order, axis=-1)
         live = jnp.isfinite(jnp.take_along_axis(score, order, axis=-1))
-        nbrs_l.append(jnp.where(live, ids, -1))
-        stat_l.append(jnp.where(live, st, 0))
+        nbrs = jnp.where(live, ids_k, -1)
+        stat = jnp.where(live, st_k, 0)
         # Repair pairs (w, v): witness gets the pruned endpoint.
-        for rep in (res.repair_if, res.repair_is):
-            wpair_w.append(rep.reshape(-1))
-            wpair_v.append(jnp.where(rep >= 0, res.order, -1).reshape(-1))
-        if progress is not None:
-            progress(f"prune block {s}:{min(s + cfg.block, n)}")
-    nbrs = jnp.concatenate(nbrs_l)
-    stat = jnp.concatenate(stat_l)
-    return nbrs, stat, jnp.concatenate(wpair_w), jnp.concatenate(wpair_v)
+        w_w = jnp.concatenate(
+            [res.repair_if.reshape(-1), res.repair_is.reshape(-1)]
+        )
+        w_v = jnp.concatenate([
+            jnp.where(res.repair_if >= 0, res.order, -1).reshape(-1),
+            jnp.where(res.repair_is >= 0, res.order, -1).reshape(-1),
+        ])
+        return nbrs, stat, w_w, w_v
+
+    nbrs, stat, w_w, w_v = jax.lax.map(one_block, (u_blocks, cand_blocks))
+    return (
+        nbrs.reshape(n_pad, keep)[:n],
+        stat.reshape(n_pad, keep)[:n],
+        w_w.reshape(-1),
+        w_v.reshape(-1),
+    )
 
 
 def build_ug(
@@ -109,7 +137,12 @@ def build_ug(
     cfg: UGConfig = UGConfig(),
     progress: Callable[[str], None] | None = None,
 ) -> DenseGraph:
-    """Paper Alg. 1 + Alg. 2: candidate generation then T pruning iterations."""
+    """Paper Alg. 1 + Alg. 2: candidate generation then T pruning iterations.
+
+    All iterations run on-device; degree statistics accumulate as device
+    scalars and transfer to the host in a single sync after the last sweep
+    (together with the trailing-column trim bound).
+    """
     n = x.shape[0]
     cand = generate_candidates(
         key, x, intervals,
@@ -121,16 +154,22 @@ def build_ug(
 
     repair = jnp.full((n, cfg.repair_width), -1, jnp.int32)
     nbrs = stat = None
+    deg_means = []
     for t in range(cfg.iterations):
         pool = cand if t == 0 else jnp.concatenate([cand, repair], axis=1)
-        nbrs, stat, w_w, w_v = _prune_all(x, intervals, pool, cfg, progress)
+        keep = min(cfg.max_edges_if + cfg.max_edges_is, pool.shape[1])
+        nbrs, stat, w_w, w_v = _prune_all(
+            x, intervals, pool, cfg, keep, cfg.prune_backend
+        )
         cand = nbrs  # retained neighbors seed the next round (Alg. 2 line 10)
         repair = scatter_repairs(w_w, w_v, n, cfg.repair_width)
-        if progress is not None:
-            deg = float(jnp.mean(jnp.sum(nbrs >= 0, axis=1)))
-            progress(f"iter {t + 1}/{cfg.iterations}: mean degree {deg:.1f}")
+        deg_means.append(jnp.mean(jnp.sum(nbrs >= 0, axis=1).astype(jnp.float32)))
 
-    # Trim trailing all-pad columns.
-    live_cols = int(jnp.max(jnp.sum(nbrs >= 0, axis=1)))
-    live_cols = max(live_cols, 1)
-    return DenseGraph(nbrs[:, :live_cols], stat[:, :live_cols])
+    # Single device→host sync: per-iteration degree stats + trailing trim.
+    live_cols = jnp.maximum(jnp.max(jnp.sum(nbrs >= 0, axis=1)), 1)
+    live_cols, deg_host = jax.device_get((live_cols, jnp.stack(deg_means)))
+    if progress is not None:
+        for t, dm in enumerate(np.asarray(deg_host)):
+            progress(f"iter {t + 1}/{cfg.iterations}: mean degree {float(dm):.1f}")
+
+    return DenseGraph(nbrs[:, : int(live_cols)], stat[:, : int(live_cols)])

@@ -19,9 +19,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.prune import squared_dist
+from repro.kernels.util import pad_rows, pad_to
 
 
 class KnnState(NamedTuple):
@@ -104,6 +104,46 @@ def _reverse_candidates(ids: jnp.ndarray, r_max: int) -> jnp.ndarray:
     return out[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def _blocked_refine(
+    x: jnp.ndarray,
+    ids: jnp.ndarray,     # (n, k) current neighbor state, -1 pads
+    dist: jnp.ndarray,    # (n, k)
+    cand: jnp.ndarray,    # (n, Cc) join candidates, -1 pads
+    k: int,
+    block: int,
+):
+    """Score ``cand`` against its rows and merge into the top-k state — one
+    jitted ``lax.map`` over ``block``-row tiles (the same blocked-scan shape
+    as ``build._prune_all``; no untraced Python block loop)."""
+    n = x.shape[0]
+    n_pad = pad_to(n, block)
+    rows = jnp.arange(n_pad, dtype=jnp.int32)
+    u_pad = jnp.where(rows < n, rows, 0)
+    ids_p = pad_rows(ids, n_pad, -1)
+    dist_p = pad_rows(dist, n_pad, jnp.inf)
+    cand_p = pad_rows(cand, n_pad, -1)
+
+    def one_block(args):
+        u, i_b, d_b, c_b = args
+        xc = x[jnp.clip(c_b, 0, n - 1)]
+        xu = x[u]
+        db = squared_dist(xu[:, None, :], xc)[:, 0, :]
+        db = jnp.where((c_b < 0) | (c_b == u[:, None]), jnp.inf, db)
+        return merge_topk(i_b, d_b, c_b, db, k)
+
+    mi, md = jax.lax.map(
+        one_block,
+        (
+            u_pad.reshape(-1, block),
+            ids_p.reshape(-1, block, ids.shape[1]),
+            dist_p.reshape(-1, block, dist.shape[1]),
+            cand_p.reshape(-1, block, cand.shape[1]),
+        ),
+    )
+    return mi.reshape(n_pad, k)[:n], md.reshape(n_pad, k)[:n]
+
+
 def nn_descent(
     key: jax.Array,
     x: jnp.ndarray,
@@ -114,31 +154,16 @@ def nn_descent(
     block: int = 4096,
 ) -> KnnState:
     """Fixed-width NN-descent: local join over forward, reverse and random
-    candidates, merged with blocked matmul distances."""
+    candidates, merged with blocked matmul distances (``lax.map`` tiles)."""
     n, _ = x.shape
     key, k0 = jax.random.split(key)
     init_ids = jax.random.randint(k0, (n, k), 0, n, dtype=jnp.int32)
 
-    def dists_to(u_ids, cand):
-        xc = x[jnp.clip(cand, 0, n - 1)]
-        xu = x[u_ids]
-        d = squared_dist(xu[:, None, :], xc)[:, 0, :]
-        d = jnp.where((cand < 0) | (cand == u_ids[:, None]), jnp.inf, d)
-        return d
-
-    state = None
-    for s in range(0, n, block):
-        u = jnp.arange(s, min(s + block, n), dtype=jnp.int32)
-        d = dists_to(u, init_ids[s : s + block])
-        ids_b, d_b = merge_topk(
-            init_ids[s : s + block], d, jnp.full_like(init_ids[s : s + block], -1), d, k
-        )
-        state = (
-            (ids_b, d_b)
-            if state is None
-            else (jnp.concatenate([state[0], ids_b]), jnp.concatenate([state[1], d_b]))
-        )
-    ids, dist = state
+    # Initial state: sort + dedup the random seeds (merge into an empty beam).
+    empty = jnp.full((n, k), -1, jnp.int32)
+    ids, dist = _blocked_refine(
+        x, empty, jnp.full((n, k), jnp.inf, jnp.float32), init_ids, k, block
+    )
 
     for it in range(iters):
         key, k1 = jax.random.split(key)
@@ -148,25 +173,26 @@ def nn_descent(
         rev = _reverse_candidates(ids, sample)
         rnd = jax.random.randint(k1, (n, 4), 0, n, dtype=jnp.int32)
         cand = jnp.concatenate([non, rev, rnd], axis=1)
-
-        new_ids = []
-        new_d = []
-        for s in range(0, n, block):
-            u = jnp.arange(s, min(s + block, n), dtype=jnp.int32)
-            cb = cand[s : s + block]
-            db = dists_to(u, cb)
-            mi, md = merge_topk(ids[s : s + block], dist[s : s + block], cb, db, k)
-            new_ids.append(mi)
-            new_d.append(md)
-        ids = jnp.concatenate(new_ids)
-        dist = jnp.concatenate(new_d)
+        ids, dist = _blocked_refine(x, ids, dist, cand, k, block)
     return KnnState(ids, dist)
+
+
+def attribute_width(ef_attribute: int) -> int:
+    """Total attribute-candidate columns: 2 sides × ``ef_attribute/8`` per
+    side × 4 sort keys (Alg. 1 lines 3-10).  Owned here so consumers (e.g.
+    ``bench_build``'s sweep-shape profile) cannot drift from the builder."""
+    return 8 * max(ef_attribute // 8, 1)
+
+
+def candidate_pool_width(ef_spatial: int, ef_attribute: int) -> int:
+    """Iteration-0 candidate-pool width of :func:`generate_candidates`."""
+    return ef_spatial + attribute_width(ef_attribute)
 
 
 def attribute_candidates(intervals: jnp.ndarray, ef_attribute: int) -> jnp.ndarray:
     """Alg. 1 lines 3-10: neighbors in the four interval-derived sort orders."""
     n = intervals.shape[0]
-    w = max(ef_attribute // 8, 1)
+    w = attribute_width(ef_attribute) // 8    # per-side width per sort key
     l = intervals[:, 0]
     r = intervals[:, 1]
     keys = [l, r, (l + r) * 0.5, r - l]

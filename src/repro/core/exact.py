@@ -56,12 +56,15 @@ def build_exact(
     alpha: float = 1.0,
     node_mask: jnp.ndarray | None = None,
     block: int = 128,
+    backend: str | None = None,
 ) -> DenseGraph:
     """Exact URNG (``unified=True``) or classical RNG (``unified=False``).
 
     ``node_mask`` restricts construction to a subset of nodes — used by the
     structural-heredity tests (Thm 3.5/4.1): building on the masked set must
-    equal inducing the full graph onto it.
+    equal inducing the full graph onto it.  ``backend`` selects the pruning
+    sweep implementation (bit-identical across all three, so the oracle is
+    backend-independent by construction — asserted in test_exact_urng.py).
     """
     n = x.shape[0]
     ids = np.arange(n, dtype=np.int32)
@@ -82,7 +85,8 @@ def build_exact(
         u_blk = jnp.asarray(u_all[s : s + block])
         cand = jnp.asarray(np.broadcast_to(cand_row, (u_blk.shape[0], n)).copy())
         res = unified_prune(
-            u_blk, cand, x, intervals, m_if=n, m_is=n, alpha=alpha, unified=unified
+            u_blk, cand, x, intervals, m_if=n, m_is=n, alpha=alpha,
+            unified=unified, backend=backend,
         )
         nbrs_out[np.asarray(u_blk)] = np.asarray(res.order)
         stat_out[np.asarray(u_blk)] = np.asarray(res.status)

@@ -8,12 +8,13 @@ The single routine :func:`unified_prune` implements the paper's
 * the **practical UG build** (bounded candidate pools from Alg. 1 + repair
   sets from Alg. 2).
 
-TPU adaptation (see DESIGN.md §2): the per-candidate scan of Alg. 3 is a
-``lax.fori_loop`` whose witness check is a *vectorized* mask over all already
-retained candidates, and the whole thing is ``vmap``-ed over a block of nodes.
-Distances are blocked matmuls (fp32 accumulation).  Classical RNG pruning
+This module owns the fixed-shape *preprocessing* — dedup, distance sort,
+vector/interval gathers — and hands the scan itself to
+``ops.prune_sweep`` (kernels/prune_sweep.py), which dispatches between the
+fused Pallas kernel, its bit-identical plain-XLA twin, and the legacy
+materialize-everything baseline (DESIGN.md §9).  Classical RNG pruning
 (used by the post-filtering baseline) is the same routine with the semantic
-witness conditions forced to ``True``.
+witness conditions forced to ``True`` (``unified=False``).
 """
 from __future__ import annotations
 
@@ -24,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import intervals as iv
+from repro.kernels import ops
 
 
 class PruneResult(NamedTuple):
@@ -48,15 +50,19 @@ def squared_dist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 
 def _dedup_sorted_by_distance(cand: jnp.ndarray, dist: jnp.ndarray):
-    """Mask duplicate candidate ids (keep the first), then sort by distance.
+    """Mask duplicate candidate ids (keep the closest copy), then sort by
+    distance.
 
-    ``cand`` is (C,) int32 with -1 padding; ``dist`` is (C,) f32.
+    ``cand`` is (C,) int32 with -1 padding; ``dist`` is (C,) f32.  Among
+    copies of the same id the minimum-distance one survives (ties broken by
+    scan position); masked copies and -1 pads sort to the back as +inf.
     """
     big = jnp.float32(jnp.inf)
     invalid = cand < 0
     dist = jnp.where(invalid, big, dist)
-    # Detect duplicates by sorting ids and flagging repeats.
-    id_order = jnp.argsort(cand)
+    # Detect duplicates by sorting (id, dist) lexicographically and flagging
+    # repeats: the first copy in that order is the closest one.
+    id_order = jnp.lexsort((dist, cand))
     sorted_ids = cand[id_order]
     dup_sorted = jnp.concatenate(
         [jnp.zeros((1,), bool), sorted_ids[1:] == sorted_ids[:-1]]
@@ -64,90 +70,16 @@ def _dedup_sorted_by_distance(cand: jnp.ndarray, dist: jnp.ndarray):
     dup = jnp.zeros_like(dup_sorted).at[id_order].set(dup_sorted)
     dist = jnp.where(dup, big, dist)
     order = jnp.argsort(dist)
-    return cand[order], dist[order]
-
-
-def _prune_one_node(
-    i_u: jnp.ndarray,        # (2,) interval of u
-    cand: jnp.ndarray,       # (C,) candidate ids (dedup'd, distance-sorted)
-    d_uc: jnp.ndarray,       # (C,) squared distances δ²(u, c)
-    d_cc: jnp.ndarray,       # (C, C) pairwise squared distances among candidates
-    i_c: jnp.ndarray,        # (C, 2) candidate intervals
-    m_if: int,
-    m_is: int,
-    alpha: float,
-    unified: bool,
-):
-    """Algorithm 3 for one node, with vectorized witness checks."""
-    C = cand.shape[0]
-    valid = (cand >= 0) & jnp.isfinite(d_uc)
-
-    if unified:
-        # Φ matrices over (candidate v, witness w) pairs; row = v, col = w.
-        iu_b = jnp.broadcast_to(i_u, (C, C, 2))
-        iv_b = jnp.broadcast_to(i_c[:, None, :], (C, C, 2))
-        iw_b = jnp.broadcast_to(i_c[None, :, :], (C, C, 2))
-        phi_if_mat = iv.phi_if(iu_b, iv_b, iw_b)
-        phi_is_mat = iv.phi_is(iu_b, iv_b, iw_b)
-        overlap_uv = ~iv.is_empty(iv.intersection(jnp.broadcast_to(i_u, (C, 2)), i_c))
-    else:
-        # Classical RNG pruning: semantic conditions always hold (both bits
-        # follow pure geometry — used for interval-agnostic baselines).
-        phi_if_mat = jnp.ones((C, C), bool)
-        phi_is_mat = jnp.ones((C, C), bool)
-        overlap_uv = jnp.ones((C,), bool)
-
-    alpha2 = jnp.float32(alpha) ** 2
-    jrange = jnp.arange(C)
-
-    def body(t, state):
-        act_if, act_is, cnt_if, cnt_is, rep_if, rep_is = state
-        v_ok = valid[t]
-        s_if = v_ok
-        s_is = v_ok & overlap_uv[t]
-
-        # Witness scan (Alg. 3 lines 9-17), vectorized over retained prefix.
-        geo = (jrange < t) & (alpha2 * d_cc[t] < d_uc[t])
-        wit_if = geo & act_if & phi_if_mat[t]
-        wit_is = geo & act_is & phi_is_mat[t]
-        pruned_if = jnp.any(wit_if)
-        pruned_is = jnp.any(wit_is)
-        j_if = jnp.argmax(wit_if)  # first witness in scan order
-        j_is = jnp.argmax(wit_is)
-
-        keep_if = s_if & ~pruned_if
-        keep_is = s_is & ~pruned_is
-        # Semantic degree budgets (lines 18-21).
-        keep_if = keep_if & (cnt_if < m_if)
-        keep_is = keep_is & (cnt_is < m_is)
-        cnt_if = cnt_if + keep_if.astype(jnp.int32)
-        cnt_is = cnt_is + keep_is.astype(jnp.int32)
-
-        act_if = act_if.at[t].set(keep_if)
-        act_is = act_is.at[t].set(keep_is)
-        rep_if = rep_if.at[t].set(jnp.where(s_if & pruned_if, j_if, -1))
-        rep_is = rep_is.at[t].set(jnp.where(s_is & pruned_is, j_is, -1))
-        return act_if, act_is, cnt_if, cnt_is, rep_if, rep_is
-
-    init = (
-        jnp.zeros((C,), bool),
-        jnp.zeros((C,), bool),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.full((C,), -1, jnp.int32),
-        jnp.full((C,), -1, jnp.int32),
-    )
-    act_if, act_is, _, _, rep_if, rep_is = jax.lax.fori_loop(0, C, body, init)
-
-    status = act_if.astype(jnp.uint8) * iv.FLAG_IF + act_is.astype(jnp.uint8) * iv.FLAG_IS
-    # Map local witness slots to global ids.
-    safe = lambda r: jnp.where(r >= 0, cand[jnp.clip(r, 0, C - 1)], -1)
-    return status, safe(rep_if), safe(rep_is)
+    out_d = dist[order]
+    # Dead slots (pads, masked duplicates) are normalized to -1 so junk ids
+    # can never leak into neighbor lists downstream.
+    out_c = jnp.where(jnp.isfinite(out_d), cand[order], -1)
+    return out_c, out_d
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("m_if", "m_is", "alpha", "unified"),
+    static_argnames=("m_if", "m_is", "alpha", "unified", "backend"),
 )
 def unified_prune(
     u_ids: jnp.ndarray,     # (B,) int32 node ids of this block
@@ -159,12 +91,15 @@ def unified_prune(
     m_is: int,
     alpha: float = 1.0,
     unified: bool = True,
+    backend: str | None = None,
 ) -> PruneResult:
     """Vectorized Alg. 3 over a block of ``B`` nodes.
 
     Returns neighbor sets in ascending-distance order together with the
     semantic bitmask of every surviving edge and the repair pairs ``(w, v)``
-    feeding Alg. 2's next iteration.
+    feeding Alg. 2's next iteration.  ``backend`` selects the sweep
+    implementation (``pallas`` / ``xla`` / ``legacy``, default per platform);
+    all three are bit-identical.
     """
     B, C = cand.shape
     safe_cand = jnp.clip(cand, 0, x.shape[0] - 1)
@@ -176,15 +111,27 @@ def unified_prune(
     cand_sorted, d_sorted = jax.vmap(_dedup_sorted_by_distance)(cand, d_uc)
 
     safe_sorted = jnp.clip(cand_sorted, 0, x.shape[0] - 1)
-    xs = x[safe_sorted]                          # (B, C, d)
-    d_cc = squared_dist(xs, xs)                  # (B, C, C)
+    xs = x[safe_sorted].astype(jnp.float32)      # (B, C, d)
     i_c = intervals[safe_sorted]                 # (B, C, 2)
     i_u = intervals[u_ids]                       # (B, 2)
 
-    status, rep_if, rep_is = jax.vmap(
-        lambda a, b, c, dd, e: _prune_one_node(
-            a, b, c, dd, e, m_if=m_if, m_is=m_is, alpha=alpha, unified=unified
-        )
-    )(i_u, cand_sorted, d_sorted, d_cc, i_c)
+    valid = (cand_sorted >= 0) & jnp.isfinite(d_sorted)
+    if unified:
+        overlap = ~iv.is_empty(iv.intersection(i_u[:, None, :], i_c))
+    else:
+        overlap = jnp.ones((B, C), bool)
 
-    return PruneResult(cand_sorted, d_sorted, status, rep_if, rep_is)
+    status, rep_if, rep_is = ops.prune_sweep(
+        i_u, xs, i_c, d_sorted, valid, overlap,
+        m_if=m_if, m_is=m_is, alpha=alpha, unified=unified, backend=backend,
+    )
+
+    # Map local witness slots to global candidate ids.
+    def to_global(rep):
+        g = jnp.take_along_axis(cand_sorted, jnp.clip(rep, 0, C - 1), axis=-1)
+        return jnp.where(rep >= 0, g, -1)
+
+    return PruneResult(
+        cand_sorted, d_sorted, status.astype(jnp.uint8),
+        to_global(rep_if), to_global(rep_is),
+    )

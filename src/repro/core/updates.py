@@ -73,7 +73,7 @@ def insert(index: UGIndex, new_x, new_intervals) -> UGIndex:
     res = unified_prune(
         new_ids, cand, x_all, iv_all,
         m_if=cfg.max_edges_if, m_is=cfg.max_edges_is,
-        alpha=cfg.alpha, unified=cfg.unified,
+        alpha=cfg.alpha, unified=cfg.unified, backend=cfg.prune_backend,
     )
     m_cols = index.graph.nbrs.shape[1]
     keep = min(m_cols, res.order.shape[1])

@@ -10,15 +10,18 @@ import jax.numpy as jnp
 
 from repro.kernels import beam_merge as beam_merge_mod
 from repro.kernels import fused_scan, gather_dist, l2dist
+from repro.kernels import prune_sweep as prune_sweep_mod
 from repro.kernels.util import on_cpu
 
 
-def resolve_backend(backend: str | None) -> str:
+def resolve_backend(
+    backend: str | None, *, choices: tuple[str, ...] = ("pallas", "xla")
+) -> str:
     """Default kernel backend: Pallas on TPU, plain-jnp XLA on CPU CI."""
     if backend is None:
         return "xla" if on_cpu() else "pallas"
-    if backend not in ("pallas", "xla"):
-        raise ValueError(f"unknown kernel backend {backend!r}")
+    if backend not in choices:
+        raise ValueError(f"unknown kernel backend {backend!r} (choices {choices})")
     return backend
 
 
@@ -46,6 +49,40 @@ def filtered_topk(
 def gather_sq_dist(x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     """Beam-expansion scoring via scalar-prefetch row gather."""
     return gather_dist.gather_sq_dist(x, idx, q, interpret=on_cpu())
+
+
+def prune_sweep(
+    i_u, xs, i_c, d_uc, valid, overlap,
+    *,
+    m_if: int,
+    m_is: int,
+    alpha: float = 1.0,
+    unified: bool = True,
+    backend: str | None = None,
+    bb: int = 32,
+):
+    """Unified interval-aware pruning sweep (Alg. 3) over a node block.
+
+    Returns ``(status int32, rep_if, rep_is)`` with repair slots local to
+    the candidate axis.  All three backends run bit-identical scans:
+    ``pallas`` tiles the batch ``bb`` rows per grid cell, ``xla`` traces the
+    same block function over the whole batch, ``legacy`` materializes the
+    ``(B, C, C)`` distance + Φ witness tensors before scanning (the
+    pre-fusion baseline kept for A/B benchmarking).
+    """
+    resolved = resolve_backend(backend, choices=("pallas", "xla", "legacy"))
+    kw = dict(m_if=m_if, m_is=m_is, alpha=alpha, unified=unified)
+    if resolved == "legacy":
+        return prune_sweep_mod.prune_sweep_legacy(
+            i_u, xs, i_c, d_uc, valid, overlap, **kw
+        )
+    if resolved == "xla":
+        return prune_sweep_mod.prune_sweep_xla(
+            i_u, xs, i_c, d_uc, valid, overlap, **kw
+        )
+    return prune_sweep_mod.prune_sweep(
+        i_u, xs, i_c, d_uc, valid, overlap, bb=bb, interpret=on_cpu(), **kw
+    )
 
 
 def beam_merge(beam_d, beam_p, cand_d, cand_p, *, backend: str | None = None):

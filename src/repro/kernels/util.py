@@ -2,11 +2,22 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 
 def pad_to(n: int, m: int) -> int:
     """Round ``n`` up to a multiple of ``m`` (at least ``m``)."""
     return max(((n + m - 1) // m) * m, m)
+
+
+def pad_rows(a: jnp.ndarray, n_pad: int, fill) -> jnp.ndarray:
+    """Pad the leading axis of ``a`` to ``n_pad`` rows with ``fill``."""
+    n = a.shape[0]
+    if n_pad == n:
+        return a
+    return jnp.concatenate(
+        [a, jnp.full((n_pad - n,) + a.shape[1:], fill, a.dtype)], axis=0
+    )
 
 
 def compiler_params(dimension_semantics: tuple[str, ...]):

@@ -31,6 +31,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-edges", type=int, default=32)
     ap.add_argument("--iterations", type=int, default=3)
     ap.add_argument("--interval-mode", default="uniform", choices=["uniform", "point"])
+    ap.add_argument("--prune-backend", default="auto",
+                    choices=["auto", "pallas", "xla", "legacy"],
+                    help="pruning-sweep kernel backend (auto = Pallas on TPU, "
+                         "XLA on CPU); all three build bit-identical graphs")
     ap.add_argument("--out", default=None, help="directory to save the index")
     ap.add_argument("--selftest", action="store_true", default=True)
     args = ap.parse_args(argv)
@@ -42,6 +46,7 @@ def main(argv=None) -> int:
         ef_spatial=args.ef_spatial, ef_attribute=args.ef_attribute,
         max_edges_if=args.max_edges, max_edges_is=args.max_edges,
         iterations=args.iterations, exact_spatial=args.n <= 8192,
+        prune_backend=None if args.prune_backend == "auto" else args.prune_backend,
     )
     idx = UGIndex.build(x, ints, cfg, progress=lambda m: print(f"[build] {m}"))
     print(f"[build] done in {idx.build_seconds:.1f}s; "

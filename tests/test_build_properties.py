@@ -1,0 +1,120 @@
+"""Property tests for the construction pipeline's scatter/dedup primitives.
+
+numpy oracles for the two fixed-width building blocks of Alg. 2:
+
+* ``build.scatter_repairs`` — fixed-width truncation keeps the first
+  ``width`` offers per witness *in scan order*; -1 pads never leak;
+* ``prune._dedup_sorted_by_distance`` — duplicate candidate ids keep the
+  *closest* copy; pads and masked duplicates sort to the back as +inf.
+
+Runs under real hypothesis when installed, else the vendored fallback shim
+(tests/_hypothesis_fallback.py) registered by conftest.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.build import scatter_repairs
+from repro.core.prune import _dedup_sorted_by_distance
+
+
+# ------------------------------------------------------------------ oracles
+def scatter_oracle(w_ids, v_ids, n, width):
+    out = np.full((n, width), -1, np.int32)
+    fill = np.zeros(n, np.int32)
+    for w, v in zip(w_ids, v_ids):
+        if w < 0 or v < 0 or w >= n:
+            continue
+        if fill[w] < width:
+            out[w, fill[w]] = v
+            fill[w] += 1
+    return out
+
+
+def dedup_oracle(cand, dist):
+    """Keep the closest copy of each id (ties: first by scan position),
+    ascending-distance order, -1/inf pads at the back."""
+    best = {}
+    for pos, (c, dv) in enumerate(zip(cand, dist)):
+        if c < 0:
+            continue
+        if c not in best or dv < best[c][0]:
+            best[c] = (dv, pos)
+    order = sorted(best.items(), key=lambda kv: (kv[1][0], kv[1][1]))
+    ids = [c for c, _ in order]
+    ds = [d for _, (d, _) in order]
+    pad = len(cand) - len(ids)
+    return ids + [-1] * pad, ds + [np.inf] * pad
+
+
+# ----------------------------------------------------------------- scatter
+@settings(max_examples=40)
+@given(st.integers(min_value=1, max_value=60), st.integers(min_value=1, max_value=9),
+       st.integers(min_value=0, max_value=10_000))
+def test_scatter_repairs_matches_oracle(n, width, seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 120))
+    w_ids = rng.integers(-2, n, size=m).astype(np.int32)
+    v_ids = rng.integers(-2, n, size=m).astype(np.int32)
+    got = np.asarray(scatter_repairs(jnp.asarray(w_ids), jnp.asarray(v_ids), n, width))
+    want = scatter_oracle(w_ids, v_ids, n, width)
+    assert got.shape == (n, width)
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=20)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_scatter_repairs_truncates_in_scan_order(seed):
+    """Over-full witnesses keep exactly the first-by-scan-order offers."""
+    rng = np.random.default_rng(seed)
+    width, n = 3, 4
+    w_ids = np.zeros(10, np.int32)            # every offer targets witness 0
+    v_ids = rng.integers(0, n, size=10).astype(np.int32)
+    got = np.asarray(scatter_repairs(jnp.asarray(w_ids), jnp.asarray(v_ids), n, width))
+    assert got[0].tolist() == v_ids[:width].tolist()
+    assert (got[1:] == -1).all()
+
+
+def test_scatter_repairs_no_pad_leak():
+    """(w, v) pairs with any -1 side must never land in a repair slot."""
+    w_ids = jnp.asarray([0, -1, 1, 2, -1], jnp.int32)
+    v_ids = jnp.asarray([-1, 3, 4, -1, -1], jnp.int32)
+    got = np.asarray(scatter_repairs(w_ids, v_ids, 4, 2))
+    assert got.tolist() == [[-1, -1], [4, -1], [-1, -1], [-1, -1]]
+
+
+# -------------------------------------------------------------------- dedup
+@settings(max_examples=40)
+@given(st.integers(min_value=1, max_value=48), st.integers(min_value=2, max_value=12),
+       st.integers(min_value=0, max_value=10_000))
+def test_dedup_matches_oracle(C, id_pool, seed):
+    rng = np.random.default_rng(seed)
+    cand = rng.integers(-2, id_pool, size=C).astype(np.int32)
+    dist = rng.uniform(0.0, 4.0, size=C).astype(np.float32)
+    got_c, got_d = _dedup_sorted_by_distance(jnp.asarray(cand), jnp.asarray(dist))
+    want_c, want_d = dedup_oracle(cand, dist)
+    assert np.asarray(got_c).tolist() == want_c
+    got_d = np.asarray(got_d)
+    assert np.array_equal(got_d[np.isfinite(got_d)],
+                          np.asarray(want_d)[np.isfinite(want_d)])
+    assert np.isinf(got_d[np.asarray(got_c) < 0]).all()   # pads carry +inf
+
+
+@settings(max_examples=20)
+@given(st.floats(min_value=0.25, max_value=2.0, width=32),
+       st.floats(min_value=2.25, max_value=4.0, width=32))
+def test_dedup_keeps_closest_copy(d_near, d_far):
+    """The same id at two distances survives only at the nearer one."""
+    cand = jnp.asarray([7, 3, 7, -1], jnp.int32)
+    dist = jnp.asarray([d_far, 3.0, d_near, 0.0], jnp.float32)
+    got_c, got_d = _dedup_sorted_by_distance(cand, dist)
+    got_c, got_d = np.asarray(got_c), np.asarray(got_d)
+    sel = got_c == 7
+    assert sel.sum() == 1
+    assert got_d[sel][0] == np.float32(d_near)
+    assert got_c[-1] == -1 and np.isinf(got_d[-1])        # -1 pad never leaks
+
+    # output is ascending in distance over the live prefix
+    live = got_d[np.isfinite(got_d)]
+    assert (np.diff(live) >= 0).all()

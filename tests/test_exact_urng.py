@@ -92,6 +92,23 @@ def test_m_infinite_equivalence(small_corpus):
         assert _edge_set(g.induced(mask), sem.flag) == _edge_set(rebuilt, sem.flag)
 
 
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_heredity_holds_on_fused_sweep(urng, small_corpus, backend):
+    """ISSUE 2: the fused (no-Φ-materialization) sweep still satisfies
+    Def. 3.1 heredity — the exact URNG built through it equals the legacy
+    graph bitwise, and induce == rebuild on a query-valid subset."""
+    x, ints = small_corpus
+    fused = build_exact(x, ints, unified=True, backend=backend)
+    assert np.array_equal(np.asarray(fused.nbrs), np.asarray(urng.nbrs))
+    assert np.array_equal(np.asarray(fused.status), np.asarray(urng.status))
+    q = jnp.asarray([0.3, 0.7], jnp.float32)
+    mask = iv.query_valid_mask(iv.Semantics.IF, ints, q)
+    rebuilt = build_exact(x, ints, unified=True, node_mask=np.asarray(mask),
+                          backend=backend)
+    assert _edge_set(fused.induced(mask), iv.FLAG_IF) == \
+        _edge_set(rebuilt, iv.FLAG_IF)
+
+
 def test_classical_rng_is_subset_free(small_corpus):
     """URNG ≠ RNG (paper §3, 'no direct inclusion'): interval-aware pruning
     both *keeps* edges RNG drops (no valid witness) and *drops* edges RNG

@@ -1,0 +1,218 @@
+"""Fused prune-sweep kernel: backends vs a numpy Alg. 3 oracle.
+
+Construction correctness contract (ISSUE 2): the ``pallas`` / ``xla`` /
+``legacy`` sweeps must return *bit-identical* ``status`` / ``repair_if`` /
+``repair_is`` across a grid of shapes, alphas, semantics modes, degenerate
+(point) intervals and all-pad rows — and the fused backends must never
+materialize a ``(B, C, C)`` witness/distance tensor.  Mirrors the
+test_beam_merge.py oracle style, one level down the build stack.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import intervals as iv
+from repro.core.build import UGConfig, build_ug
+from repro.core.prune import unified_prune
+from repro.kernels import ops
+from repro.kernels import prune_sweep as ps
+
+BACKENDS = ("legacy", "xla", "pallas")
+# Exactly f32-representable alphas so α² is bit-identical in every backend
+# and in the float64 oracle.
+ALPHAS = (1.0, 1.25)
+
+
+def make_case(seed, B, C, d, *, point=False, pad_frac=0.2, grid=False):
+    """Synthetic *preprocessed* sweep inputs (the ops.prune_sweep contract).
+
+    ``grid=True`` draws vectors/intervals from tiny exact-float grids so
+    every distance and comparison is exact — the deliberate-ties regime.
+    """
+    rng = np.random.default_rng(seed)
+    if grid:
+        xs = rng.choice([0.0, 0.5, 1.0, 2.0], size=(B, C, d)).astype(np.float32)
+        ends = rng.choice([0.0, 0.25, 0.5, 0.75, 1.0], size=(B, C, 2))
+    else:
+        xs = rng.normal(size=(B, C, d)).astype(np.float32)
+        ends = rng.uniform(size=(B, C, 2))
+    i_c = np.sort(ends, axis=-1).astype(np.float32)
+    if point:
+        i_c[..., 1] = i_c[..., 0]            # degenerate (RF-style) intervals
+    i_u = np.sort(rng.uniform(size=(B, 2)), axis=-1).astype(np.float32)
+
+    d_uc = rng.uniform(0.1, 4.0, size=(B, C)).astype(np.float32)
+    valid = rng.uniform(size=(B, C)) >= pad_frac
+    d_uc[~valid] = np.inf
+    inter_l = np.maximum(i_u[:, None, 0], i_c[..., 0])
+    inter_r = np.minimum(i_u[:, None, 1], i_c[..., 1])
+    overlap = inter_l <= inter_r
+    return tuple(map(jnp.asarray, (i_u, xs, i_c, d_uc, valid, overlap)))
+
+
+def np_oracle(i_u, xs, i_c, d_uc, valid, overlap, *, m_if, m_is, alpha, unified):
+    """Direct float64 transcription of Alg. 3 (scan with witness rows)."""
+    i_u, xs, i_c, d_uc, valid, overlap = map(np.asarray, (i_u, xs, i_c, d_uc, valid, overlap))
+    B, C = d_uc.shape
+    a2 = np.float64(np.float32(alpha)) ** 2
+    status = np.zeros((B, C), np.int32)
+    rif = np.full((B, C), -1, np.int32)
+    ris = np.full((B, C), -1, np.int32)
+    for b in range(B):
+        act_if = np.zeros(C, bool)
+        act_is = np.zeros(C, bool)
+        cnt_if = cnt_is = 0
+        xb = xs[b].astype(np.float64)
+        for t in range(C):
+            d_row = ((xb - xb[t]) ** 2).sum(-1)
+            geo = (np.arange(C) < t) & (a2 * d_row < np.float64(d_uc[b, t]))
+            if unified:
+                hl = min(i_u[b, 0], i_c[b, t, 0]); hr = max(i_u[b, 1], i_c[b, t, 1])
+                phi_if = (hl <= i_c[b, :, 0]) & (i_c[b, :, 1] <= hr)
+                il = max(i_u[b, 0], i_c[b, t, 0]); ir = min(i_u[b, 1], i_c[b, t, 1])
+                phi_is = (il <= ir) & (i_c[b, :, 0] <= il) & (i_c[b, :, 1] >= ir)
+            else:
+                phi_if = phi_is = np.ones(C, bool)
+            wit_if = geo & act_if & phi_if
+            wit_is = geo & act_is & phi_is
+            s_if = valid[b, t]
+            s_is = valid[b, t] and bool(overlap[b, t])
+            keep_if = s_if and not wit_if.any() and cnt_if < m_if
+            keep_is = s_is and not wit_is.any() and cnt_is < m_is
+            cnt_if += keep_if
+            cnt_is += keep_is
+            act_if[t] = keep_if
+            act_is[t] = keep_is
+            status[b, t] = keep_if * iv.FLAG_IF + keep_is * iv.FLAG_IS
+            if s_if and wit_if.any():
+                rif[b, t] = int(np.argmax(wit_if))
+            if s_is and wit_is.any():
+                ris[b, t] = int(np.argmax(wit_is))
+    return status, rif, ris
+
+
+def _run(backend, case, **kw):
+    st, rif, ris = ops.prune_sweep(*case, backend=backend, **kw)
+    return np.asarray(st), np.asarray(rif), np.asarray(ris)
+
+
+@pytest.mark.parametrize("B,C,d", [(1, 8, 4), (5, 33, 16), (16, 96, 24), (3, 5, 2)])
+@pytest.mark.parametrize("alpha", ALPHAS)
+@pytest.mark.parametrize("unified", [True, False])
+def test_backends_bitwise_identical(B, C, d, alpha, unified):
+    case = make_case(B * 1000 + C + d, B, C, d)
+    outs = {b: _run(b, case, m_if=8, m_is=8, alpha=alpha, unified=unified)
+            for b in BACKENDS}
+    for b in ("xla", "pallas"):
+        for ref, got in zip(outs["legacy"], outs[b]):
+            assert np.array_equal(ref, got), (b, B, C, alpha, unified)
+
+
+@pytest.mark.parametrize("grid", [False, True])
+@pytest.mark.parametrize("point", [False, True])
+def test_matches_numpy_oracle(grid, point):
+    """Backends == the literal Alg. 3 transcription, including the exact-tie
+    grid regime and degenerate (point) object intervals."""
+    case = make_case(7 + grid + 2 * point, 6, 24, 8, point=point, grid=grid)
+    kw = dict(m_if=5, m_is=5, alpha=1.0, unified=True)
+    want = np_oracle(*case, **kw)
+    for b in BACKENDS:
+        got = _run(b, case, **kw)
+        for w, g in zip(want, got):
+            assert np.array_equal(w, g), b
+
+
+def test_degree_budget_respected():
+    case = make_case(11, 4, 40, 8, pad_frac=0.0)
+    for m in (1, 3, 7):
+        st, _, _ = _run("xla", case, m_if=m, m_is=m, alpha=1.0, unified=True)
+        assert ((st & iv.FLAG_IF) > 0).sum(axis=1).max() <= m
+        assert ((st & iv.FLAG_IS) > 0).sum(axis=1).max() <= m
+
+
+def test_all_pad_rows_inert():
+    """Rows whose candidates are all padding stay fully pruned with no
+    repair offers, on every backend."""
+    i_u, xs, i_c, d_uc, valid, overlap = make_case(13, 5, 16, 8)
+    valid = valid.at[2].set(False)
+    d_uc = d_uc.at[2].set(jnp.inf)
+    case = (i_u, xs, i_c, d_uc, valid, overlap)
+    for b in BACKENDS:
+        st, rif, ris = _run(b, case, m_if=4, m_is=4, alpha=1.0, unified=True)
+        assert (st[2] == 0).all(), b
+        assert (rif[2] == -1).all() and (ris[2] == -1).all(), b
+
+
+def test_pallas_block_size_invariant():
+    """The elementwise distance rows make the sweep bitwise independent of
+    the bb row tiling (DESIGN.md §9) — unlike a matmul-identity kernel."""
+    case = make_case(17, 13, 48, 8)
+    kw = dict(m_if=6, m_is=6, alpha=1.25, unified=True)
+    ref = _run("pallas", case, bb=32, **kw)
+    for bb in (1, 4, 8, 64):
+        got = _run("pallas", case, bb=bb, **kw)
+        for r, g in zip(ref, got):
+            assert np.array_equal(r, g), bb
+
+
+def test_fused_never_materializes_quadratic():
+    """ISSUE-2 acceptance: no (·, C, C) Φ/distance tensor in the fused
+    sweeps; the legacy trace keeps them (that is what fusion removes)."""
+    for backend in ("xla", "pallas"):
+        prof = ps.sweep_memory_profile(backend, B=32, C=64, d=16)
+        assert not prof["quadratic"], backend
+    legacy = ps.sweep_memory_profile("legacy", B=32, C=64, d=16)
+    assert legacy["quadratic"]
+    assert legacy["peak_bytes"] > ps.sweep_memory_profile("xla", B=32, C=64, d=16)["peak_bytes"]
+
+
+def test_unknown_backend_rejected():
+    case = make_case(19, 2, 8, 4)
+    with pytest.raises(ValueError):
+        ops.prune_sweep(*case, m_if=4, m_is=4, backend="mosaic")
+
+
+# ------------------------------------------------------- end-to-end parity
+def test_unified_prune_backend_parity(small_corpus):
+    """Full unified_prune (dedup + sort + sweep + repair remap) is
+    bit-identical across backends on a real corpus with duplicate, self and
+    padded candidate ids."""
+    x, ints = small_corpus
+    n = x.shape[0]
+    rng = np.random.default_rng(0)
+    B, C = 24, 40
+    cand = rng.integers(-4, n, size=(B, C)).astype(np.int32)
+    cand[:, 5] = cand[:, 3]               # forced duplicates
+    cand[:, 7] = np.arange(B)             # forced self edges
+    u = jnp.arange(B, dtype=jnp.int32)
+    cand = jnp.asarray(cand)
+    outs = {
+        b: unified_prune(u, cand, x, ints, m_if=8, m_is=8, alpha=1.0,
+                         unified=True, backend=b)
+        for b in BACKENDS
+    }
+    for b in ("xla", "pallas"):
+        for f in outs[b]._fields:
+            assert np.array_equal(
+                np.asarray(getattr(outs[b], f)), np.asarray(getattr(outs["legacy"], f))
+            ), (b, f)
+
+
+def test_build_determinism_across_backends(small_corpus):
+    """Same key/config ⇒ byte-identical DenseGraph on every backend (the
+    jitted lax.map sweep included)."""
+    x, ints = small_corpus
+    cfg = dict(ef_spatial=16, ef_attribute=32, max_edges_if=16, max_edges_is=16,
+               iterations=2, repair_width=8, exact_spatial=True, block=96)
+    graphs = {
+        b: build_ug(jax.random.key(3), x, ints, UGConfig(prune_backend=b, **cfg))
+        for b in BACKENDS
+    }
+    ref = graphs["legacy"]
+    for b in ("xla", "pallas"):
+        assert np.array_equal(np.asarray(graphs[b].nbrs), np.asarray(ref.nbrs)), b
+        assert np.array_equal(np.asarray(graphs[b].status), np.asarray(ref.status)), b
+    # and rebuilding with the same backend reproduces the same bytes
+    again = build_ug(jax.random.key(3), x, ints, UGConfig(prune_backend="xla", **cfg))
+    assert np.array_equal(np.asarray(again.nbrs), np.asarray(ref.nbrs))

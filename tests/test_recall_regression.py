@@ -99,6 +99,35 @@ def test_fused_results_satisfy_predicate(interval_index, query_set):
                 assert bool(ok), (sem, i, int(v))
 
 
+@pytest.fixture(scope="module")
+def per_backend_indexes(medium_corpus):
+    """ISSUE 2: one UG build per prune backend, same key/config."""
+    x, ints = medium_corpus
+    out = {}
+    for b in BACKENDS:
+        cfg = UGConfig(ef_spatial=32, ef_attribute=64, max_edges_if=32,
+                       max_edges_is=32, iterations=2, repair_width=16,
+                       exact_spatial=True, block=768, prune_backend=b)
+        out[b] = UGIndex.build(x, ints, cfg)
+    return out
+
+
+def test_per_backend_builds_identical_and_searchable(per_backend_indexes, query_set):
+    """Every prune backend constructs the byte-identical graph, and the
+    index it yields clears the recall floor (so the fused build path can
+    never silently regress construction quality)."""
+    qv, window, _ = query_set
+    ref = per_backend_indexes["legacy"]
+    for b in ("xla", "pallas"):
+        idx = per_backend_indexes[b]
+        assert np.array_equal(np.asarray(idx.graph.nbrs), np.asarray(ref.graph.nbrs)), b
+        assert np.array_equal(np.asarray(idx.graph.status), np.asarray(ref.graph.status)), b
+    for sem in (Semantics.IF, Semantics.IS):
+        res = ref.search(qv, window, sem=sem, ef=EF, k=K)
+        gt = ref.ground_truth(qv, window, sem=sem, k=K)
+        assert recall(res, gt) >= 0.9, sem
+
+
 def test_width_sweep_keeps_recall(interval_index, query_set):
     """Multi-expansion width trades steps for parallelism, not recall."""
     qv, window, _ = query_set
