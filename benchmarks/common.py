@@ -57,15 +57,20 @@ def hipng_index(n: int = N_DEFAULT, dim: int = DIM) -> HiPNGLite:
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
-    """(seconds_per_call, result) with jit warmup."""
+    """(seconds_per_call, result) with jit warmup.
+
+    Blocks on the *whole* result tree: with async dispatch, waiting on a
+    single leaf would stop the clock while sibling results (e.g. the other
+    per-semantics batches of a split schedule) are still executing.
+    """
     out = None
     for _ in range(warmup):
         out = fn(*args, **kw)
-        jax.block_until_ready(jax.tree.leaves(out)[0])
+        jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args, **kw)
-        jax.block_until_ready(jax.tree.leaves(out)[0])
+        jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters, out
 
 

@@ -1,11 +1,14 @@
 """Benchmark driver: one function per paper table (DESIGN.md §7).
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks corpora for
-smoke runs; ``--only <prefix>`` filters benches.
+smoke runs; ``--only <prefix>[,<prefix>…]`` filters benches; ``--json PATH``
+additionally writes the rows as a JSON artifact (the CI perf-trajectory
+surface, e.g. ``BENCH_search.json``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -16,7 +19,10 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny corpora for CI regression output (implies --quick)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench-name prefixes")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to PATH as a JSON artifact")
     args = ap.parse_args(argv)
 
     from benchmarks import tables
@@ -35,23 +41,32 @@ def main(argv=None) -> None:
         ("scalability", lambda: tables.bench_scalability(
             sizes=(500, 1000, 2000) if args.quick else (1000, 2000, 4000, 8000))),
         ("beam_sweep", lambda: tables.bench_beam_sweep(**({"n": n} if n else {}))),
+        ("mixed_workload", lambda: tables.bench_mixed_workload(
+            **({"n": n} if n else {}),
+            require_speedup=2.0 if args.smoke else None)),
         ("build", lambda: tables.bench_build(sizes=build_sizes)),
         ("kernels", tables.bench_kernels),
         ("lm_steps", tables.bench_lm_steps),
     ]
+    only = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for name, fn in benches:
-        if args.only and not name.startswith(args.only):
+        if only and not any(name.startswith(p) for p in only):
             continue
         t0 = time.time()
         try:
             for r in fn():
+                all_rows.append(r)
                 print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
             print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_rows, f, indent=2)
     if failures:
         sys.exit(1)
 

@@ -199,6 +199,110 @@ def bench_beam_sweep(n=common.N_DEFAULT):
     return rows
 
 
+# ------------------------------------------------- mixed-workload serving
+def bench_mixed_workload(n=common.N_DEFAULT, require_speedup=None):
+    """Runtime-semantics serving: one interleaved IF/IS/RF/RS batch through
+    the single compiled mixed program vs the same traffic as four
+    quarter-size per-semantics batches (DESIGN.md §10).
+
+    Derived columns report, for both schedules: wall-clock QPS,
+    per-semantics recall, and the **batch-synchronous QPS model** — the
+    fused pipeline's latency on lane-parallel hardware is (shared
+    while_loop iterations) × (per-step latency, B-independent up to the
+    lane count), so the interleaved/split speedup is ``Σ_s iters_s /
+    iters_mixed``, measured from the real programs' iteration counters
+    (``SearchResult.iters``).  The mixed batch runs exactly
+    ``max_s iters_s`` iterations (row independence), while four split
+    batches serialize all four loops.  ``require_speedup`` (used by
+    ``run.py --smoke``) asserts the sync-model speedup.
+
+    CPU wall-clock note (same caveat as ``bench_beam_sweep``): on CPU the
+    per-iteration cost grows ~linearly with B (no vector lanes to absorb
+    the batch), so split quarter batches can win wall-clock here; the
+    iteration-count model is the hardware-independent signal and the
+    wall-clock crossover is a TPU measurement (DESIGN.md §6).
+
+    Also asserted: the traced per-step intermediate profile of the
+    expand/dedup pair — the new path must show no ``(B, C, d)`` candidate
+    gather and no ``(·, C, C)`` dedup tensor (the ISSUE-3 acceptance
+    check), and mixed-batch ids must equal the per-semantics programs'
+    bitwise.
+    """
+    from repro.core.search import search_step_memory_profile
+
+    rows = []
+    # -- per-step memory profile, old expand/dedup pair vs new
+    for backend in ("legacy", "xla", "pallas"):
+        prof = search_step_memory_profile(backend)
+        if backend != "legacy":
+            assert not prof["gather_bcd"] and not prof["quadratic_cc"], (
+                f"{backend} search step materializes a quadratic intermediate")
+        rows.append(common.row(
+            f"mixed_step_profile_{backend}", 0.0,
+            f"peak_intermediate_bytes={prof['peak_bytes']} "
+            f"bcd_gather={'yes' if prof['gather_bcd'] else 'no'} "
+            f"cc_dedup={'yes' if prof['quadratic_cc'] else 'no'}"))
+
+    ug = common.ug_index(n)
+    qv, qi = common.queries("uniform", n=n)
+    _, qpoint = common.queries("point", n=n)
+    nq = qv.shape[0]
+    cycle = [Semantics.IF, Semantics.IS, Semantics.RS, Semantics.RF]
+    sems = [cycle[i % 4] for i in range(nq)]
+    is_rs = jnp.asarray([s is Semantics.RS for s in sems])
+    qm = jnp.where(is_rs[:, None], qpoint, qi)
+    subsets = {s: np.asarray([i for i, ss in enumerate(sems) if ss is s])
+               for s in cycle}
+    ef = 96
+
+    # -- interleaved: one program, one batch
+    dt_mixed, res_mixed = common.timed(
+        lambda: ug.search_mixed(qv, qm, sems, ef=ef, k=10))
+
+    # -- split: the same traffic as four per-semantics quarter batches
+    # (keyed by sem value: enum keys are not sortable as a jax pytree)
+    def run_split():
+        return {s.value: ug.search(qv[sel], qm[sel], sem=s, ef=ef, k=10)
+                for s, sel in subsets.items()}
+
+    dt_split, res_split = common.timed(run_split)
+
+    mixed_ids = np.asarray(res_mixed.ids)
+    recalls = {}
+    for s, sel in subsets.items():
+        gt = ug.ground_truth(qv[sel], qm[sel], sem=s, k=10)
+        recalls[s] = recall(
+            type(res_mixed)(res_mixed.ids[sel], res_mixed.dist[sel],
+                            res_mixed.steps[sel]), gt)
+        # runtime-semantics contract: the mixed batch answers exactly as the
+        # per-semantics program would
+        assert np.array_equal(mixed_ids[sel], np.asarray(res_split[s.value].ids)), s
+
+    # batch-synchronous latency model from the measured iteration counters
+    iters_mixed = int(res_mixed.iters)
+    iters_split = sum(int(res_split[s.value].iters) for s in cycle)
+    sync_speedup = iters_split / max(iters_mixed, 1)
+    wall_speedup = dt_split / dt_mixed
+    qps_mixed = nq / dt_mixed
+    qps_split = nq / dt_split
+    rec = " ".join(f"recall_{s.value.lower()}={recalls[s]:.3f}" for s in cycle)
+    rows.append(common.row(
+        "mixed_interleaved_4sem", 1e6 * dt_mixed / nq,
+        f"cpu_qps={qps_mixed:.0f} sync_iters={iters_mixed} {rec} "
+        f"hops={float(res_mixed.steps.mean()):.1f}"))
+    rows.append(common.row(
+        "mixed_split_4x_per_sem", 1e6 * dt_split / nq,
+        f"cpu_qps={qps_split:.0f} sync_iters={iters_split} "
+        f"sync_speedup_interleaved={sync_speedup:.2f}x "
+        f"cpu_wall_speedup={wall_speedup:.2f}x"))
+    if require_speedup is not None:
+        assert sync_speedup >= require_speedup, (
+            f"interleaved mixed batch only {sync_speedup:.2f}x fewer "
+            f"batch-synchronous iterations than four per-semantics batches "
+            f"(need >= {require_speedup}x)")
+    return rows
+
+
 # ------------------------------------------------- construction-cost sweep
 def bench_build(sizes=(1000, 2000, 4000), backends=("legacy", "xla", "pallas")):
     """Construction cost per prune backend vs n (DESIGN.md §9).
@@ -281,6 +385,12 @@ def bench_kernels():
     dt, _ = common.timed(lambda: ops.gather_sq_dist(x, idx, q))
     rows.append(common.row("kernel_gatherdist_pallas_interp", dt * 1e6,
                            "interpret-mode (TPU target)"))
+    dt, _ = common.timed(lambda: ops.expand_score(x, idx, q, backend="xla"))
+    rows.append(common.row("kernel_expandscore_xla_twin", dt * 1e6,
+                           "chunked elementwise twin (bit-identical)"))
+    dt, _ = common.timed(lambda: ops.expand_score(x, idx, q, backend="legacy"))
+    rows.append(common.row("kernel_expandscore_legacy", dt * 1e6,
+                           "(B,C,d) gather + matmul baseline"))
     return rows
 
 

@@ -33,3 +33,12 @@ for sem, q in [
     gt = index.ground_truth(qv, q, sem=sem, k=10)
     print(f"{sem.value}: recall@10 = {recall(res, gt):.3f}  "
           f"mean graph hops = {float(res.steps.mean()):.1f}")
+
+# 4. ...or serve all four from ONE batch: semantics are runtime state, so a
+#    mixed IF/IS/RS/RF stream shares a single compiled program (DESIGN.md §10)
+sems = [Semantics.IF, Semantics.IS, Semantics.RS, Semantics.RF] * 8
+q_mixed = jnp.where(
+    jnp.asarray([s is Semantics.RS for s in sems])[:, None], q_point, q_win)
+mixed = index.search_mixed(qv, q_mixed, sems, ef=64, k=10)
+print(f"mixed 4-semantics batch: {mixed.ids.shape[0]} queries in "
+      f"{int(mixed.iters)} fused iterations")

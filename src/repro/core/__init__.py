@@ -1,16 +1,23 @@
 """URNG/UG — the paper's primary contribution (unified interval-aware graph
 index) implemented as composable JAX modules.  See DESIGN.md §1-2."""
-from repro.core.intervals import FLAG_BOTH, FLAG_IF, FLAG_IS, Semantics
+from repro.core.intervals import FLAG_BOTH, FLAG_IF, FLAG_IS, Semantics, as_sem_flags
 from repro.core.build import UGConfig, build_ug
 from repro.core.exact import DenseGraph, build_exact, greedy_monotonic_path
-from repro.core.entry import EntryIndex, build_entry_index, get_entry, get_entry_batch
+from repro.core.entry import (
+    EntryIndex, build_entry_index, get_entry, get_entry_batch,
+    get_entry_batch_flags, get_entry_flags,
+)
 from repro.core.index import UGIndex, recall
-from repro.core.search import SearchResult, beam_search, brute_force, search
+from repro.core.search import (
+    SearchResult, beam_search, beam_search_flags, brute_force, search,
+    search_mixed,
+)
 
 __all__ = [
-    "FLAG_BOTH", "FLAG_IF", "FLAG_IS", "Semantics",
+    "FLAG_BOTH", "FLAG_IF", "FLAG_IS", "Semantics", "as_sem_flags",
     "UGConfig", "build_ug", "DenseGraph", "build_exact",
     "greedy_monotonic_path", "EntryIndex", "build_entry_index", "get_entry",
-    "get_entry_batch",
-    "UGIndex", "recall", "SearchResult", "beam_search", "brute_force", "search",
+    "get_entry_batch", "get_entry_batch_flags", "get_entry_flags",
+    "UGIndex", "recall", "SearchResult", "beam_search", "beam_search_flags",
+    "brute_force", "search", "search_mixed",
 ]

@@ -71,6 +71,41 @@ def build_entry_index(
     return EntryIndex(order, l_s, sv, si, pv, pi)
 
 
+def _entry_if(eidx: EntryIndex, ql: jnp.ndarray, qr: jnp.ndarray) -> jnp.ndarray:
+    """IF/RF branch of Alg. 5: first position with ``l ≥ q.l``, suffix-min
+    right endpoint certifies a valid node or NULL (Lemma 4.3)."""
+    n = eidx.l_sorted.shape[0]
+    i = jnp.searchsorted(eidx.l_sorted, ql, side="left")
+    ok = i < n
+    ic = jnp.clip(i, 0, n - 1)
+    ok = ok & (eidx.suffmin_r_val[ic] <= qr)
+    return jnp.where(ok, eidx.suffmin_r_id[ic], -1).astype(jnp.int32)
+
+
+def _entry_is(eidx: EntryIndex, ql: jnp.ndarray, qr: jnp.ndarray) -> jnp.ndarray:
+    """IS/RS branch of Alg. 5 (dual: prefix-max over ``l ≤ q.l``)."""
+    n = eidx.l_sorted.shape[0]
+    i = jnp.searchsorted(eidx.l_sorted, ql, side="right") - 1
+    ok = i >= 0
+    ic = jnp.clip(i, 0, n - 1)
+    ok = ok & (eidx.prefmax_r_val[ic] >= qr)
+    return jnp.where(ok, eidx.prefmax_r_id[ic], -1).astype(jnp.int32)
+
+
+def get_entry_flags(
+    eidx: EntryIndex, q_interval: jnp.ndarray, sem_flags: jnp.ndarray
+) -> jnp.ndarray:
+    """Alg. 5 with runtime per-query semantics: ``sem_flags`` (…,) int32
+    selects the IF or IS branch per query, so one compiled program serves a
+    mixed batch.  Each selected lane is computed exactly as the static path
+    computes it (bitwise-equal results)."""
+    ql = q_interval[..., 0]
+    qr = q_interval[..., 1]
+    return jnp.where(
+        iv.is_filter_flag(sem_flags), _entry_if(eidx, ql, qr), _entry_is(eidx, ql, qr)
+    ).astype(jnp.int32)
+
+
 def get_entry(
     eidx: EntryIndex, q_interval: jnp.ndarray, sem: iv.Semantics
 ) -> jnp.ndarray:
@@ -79,20 +114,11 @@ def get_entry(
     Returns -1 when no valid node exists (the NULL case of Lemma 4.3).
     RF == IF and RS == IS after degenerate-interval reduction (§2.1).
     """
-    n = eidx.l_sorted.shape[0]
     ql = q_interval[..., 0]
     qr = q_interval[..., 1]
     if sem in (iv.Semantics.IF, iv.Semantics.RF):
-        i = jnp.searchsorted(eidx.l_sorted, ql, side="left")
-        ok = i < n
-        ic = jnp.clip(i, 0, n - 1)
-        ok = ok & (eidx.suffmin_r_val[ic] <= qr)
-        return jnp.where(ok, eidx.suffmin_r_id[ic], -1).astype(jnp.int32)
-    i = jnp.searchsorted(eidx.l_sorted, ql, side="right") - 1
-    ok = i >= 0
-    ic = jnp.clip(i, 0, n - 1)
-    ok = ok & (eidx.prefmax_r_val[ic] >= qr)
-    return jnp.where(ok, eidx.prefmax_r_id[ic], -1).astype(jnp.int32)
+        return _entry_if(eidx, ql, qr)
+    return _entry_is(eidx, ql, qr)
 
 
 def get_entry_batch(
@@ -111,26 +137,63 @@ def get_entry_batch(
 
     Returns (..., width) int32, ``-1``-padded.
     """
+    if sem in (iv.Semantics.IF, iv.Semantics.RF):
+        ids = _entry_batch_if(eidx, q_interval, max(int(width), 1))
+    else:
+        ids = _entry_batch_is(eidx, q_interval, max(int(width), 1))
+    return _mask_duplicate_entries(ids)
+
+
+def get_entry_batch_flags(
+    eidx: EntryIndex, q_interval: jnp.ndarray, sem_flags: jnp.ndarray, width: int = 1
+) -> jnp.ndarray:
+    """Widened Alg. 5 with runtime per-query semantics ((…,) int32 flags).
+
+    Computes both branch position walks and selects per query, then masks
+    duplicates exactly as :func:`get_entry_batch` — a uniform-flag batch is
+    bitwise equal to the static call, so the mixed-workload search path can
+    share one compiled entry program (DESIGN.md §10).
+    """
     width = max(int(width), 1)
+    ids = jnp.where(
+        iv.is_filter_flag(sem_flags)[..., None],
+        _entry_batch_if(eidx, q_interval, width),
+        _entry_batch_is(eidx, q_interval, width),
+    )
+    return _mask_duplicate_entries(ids)
+
+
+def _entry_batch_if(eidx: EntryIndex, q_interval: jnp.ndarray, width: int) -> jnp.ndarray:
     n = eidx.l_sorted.shape[0]
     ql = q_interval[..., 0]
     qr = q_interval[..., 1]
     offs = jnp.arange(width, dtype=jnp.int32)
-    if sem in (iv.Semantics.IF, iv.Semantics.RF):
-        i = jnp.searchsorted(eidx.l_sorted, ql, side="left")
-        pos = i[..., None] + offs
-        ok = pos < n
-        pc = jnp.clip(pos, 0, n - 1)
-        ok = ok & (eidx.suffmin_r_val[pc] <= qr[..., None])
-        ids = jnp.where(ok, eidx.suffmin_r_id[pc], -1)
-    else:
-        i = jnp.searchsorted(eidx.l_sorted, ql, side="right") - 1
-        pos = i[..., None] - offs
-        ok = pos >= 0
-        pc = jnp.clip(pos, 0, n - 1)
-        ok = ok & (eidx.prefmax_r_val[pc] >= qr[..., None])
-        ids = jnp.where(ok, eidx.prefmax_r_id[pc], -1)
+    i = jnp.searchsorted(eidx.l_sorted, ql, side="left")
+    pos = i[..., None] + offs
+    ok = pos < n
+    pc = jnp.clip(pos, 0, n - 1)
+    ok = ok & (eidx.suffmin_r_val[pc] <= qr[..., None])
+    return jnp.where(ok, eidx.suffmin_r_id[pc], -1)
+
+
+def _entry_batch_is(eidx: EntryIndex, q_interval: jnp.ndarray, width: int) -> jnp.ndarray:
+    n = eidx.l_sorted.shape[0]
+    ql = q_interval[..., 0]
+    qr = q_interval[..., 1]
+    offs = jnp.arange(width, dtype=jnp.int32)
+    i = jnp.searchsorted(eidx.l_sorted, ql, side="right") - 1
+    pos = i[..., None] - offs
+    ok = pos >= 0
+    pc = jnp.clip(pos, 0, n - 1)
+    ok = ok & (eidx.prefmax_r_val[pc] >= qr[..., None])
+    return jnp.where(ok, eidx.prefmax_r_id[pc], -1)
+
+
+def _mask_duplicate_entries(ids: jnp.ndarray) -> jnp.ndarray:
+    """Mask repeated arg nodes to -1, first occurrence kept (width is small,
+    so the O(width²) pairwise mask is fine here)."""
+    width = ids.shape[-1]
+    offs = jnp.arange(width, dtype=jnp.int32)
     dup = (ids[..., :, None] == ids[..., None, :]) & (ids[..., None, :] >= 0)
     earlier = offs[:, None] > offs[None, :]
-    ids = jnp.where(jnp.any(dup & earlier, axis=-1), -1, ids)
-    return ids.astype(jnp.int32)
+    return jnp.where(jnp.any(dup & earlier, axis=-1), -1, ids).astype(jnp.int32)

@@ -21,6 +21,7 @@ from repro.core.entry import EntryIndex, build_entry_index, get_entry
 from repro.core.exact import DenseGraph
 from repro.core.search import SearchResult, beam_search, brute_force
 from repro.core.search import search as core_search
+from repro.core.search import search_mixed as core_search_mixed
 
 
 @dataclasses.dataclass
@@ -73,6 +74,28 @@ class UGIndex:
             self.entry, jnp.asarray(q_v), jnp.asarray(q_int),
             sem=sem, ef=ef, k=k, max_steps=max_steps,
             backend=backend, width=width,
+        )
+
+    def search_mixed(
+        self,
+        q_v,
+        q_int,
+        sem_flags,
+        *,
+        ef: int = 64,
+        k: int = 10,
+        max_steps: int = 0,
+        backend: str | None = None,
+        width: int = 4,
+    ) -> SearchResult:
+        """Alg. 5 + Alg. 4 for a batch whose queries each carry their own
+        semantics — one compiled program serves interleaved IF/IS/RF/RS
+        traffic (DESIGN.md §10).  ``sem_flags`` accepts a per-query sequence
+        of :class:`Semantics`, a flag array, or a single ``Semantics``."""
+        return core_search_mixed(
+            self.x, self.intervals, self.graph.nbrs, self.graph.status,
+            self.entry, jnp.asarray(q_v), jnp.asarray(q_int), sem_flags,
+            ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
         )
 
     def ground_truth(self, q_v, q_int, *, sem: iv.Semantics, k: int) -> SearchResult:

@@ -94,6 +94,74 @@ def query_valid_mask(sem: Semantics, intervals: jnp.ndarray, q_interval: jnp.nda
     return predicate(sem, intervals, q_interval[None, :])
 
 
+# ---------------------------------------------------------------------------
+# Runtime (per-query) semantics: sem-flag arrays instead of a static enum.
+#
+# All four semantics reduce to two predicate directions (§2.1), so one int32
+# flag per query — FLAG_IF for IF/RF, FLAG_IS for IS/RS — fully determines
+# both the validity predicate and which edge-status bit gates traversal.
+# Making the flag a traced array (not a static argname) lets one compiled
+# search program serve a mixed IF/IS/RF/RS batch (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+def as_sem_flags(sem, batch_size: int) -> jnp.ndarray:
+    """Normalize a semantics spec to a ``(batch_size,)`` int32 flag array.
+
+    Accepts one :class:`Semantics` (broadcast), a sequence of
+    ``Semantics``/flag ints (one per query), or an existing flag array.
+    Host-side values (anything but a traced array) are validated to be
+    ``FLAG_IF`` or ``FLAG_IS`` — flag 0 would silently fail every edge gate
+    and return all-NULL rows, flag 3 would traverse both semantics; tracers
+    are passed through unchecked (the caller owns them).
+    """
+    import jax
+    import numpy as np
+
+    if isinstance(sem, Semantics):
+        return jnp.full((batch_size,), sem.flag, jnp.int32)
+    if isinstance(sem, (list, tuple)):
+        sem = jnp.asarray(
+            [s.flag if isinstance(s, Semantics) else int(s) for s in sem],
+            jnp.int32,
+        )
+    if not isinstance(sem, jax.core.Tracer):
+        bad = sorted(set(np.unique(np.asarray(sem)).tolist()) - {FLAG_IF, FLAG_IS})
+        if bad:
+            raise ValueError(
+                f"sem flags must be FLAG_IF ({FLAG_IF}) or FLAG_IS "
+                f"({FLAG_IS}), got {bad}")
+    arr = jnp.asarray(sem).astype(jnp.int32)
+    if arr.ndim != 1 or arr.shape[0] != batch_size:
+        raise ValueError(f"sem flags shape {arr.shape} != ({batch_size},)")
+    return arr
+
+
+def is_filter_flag(flags: jnp.ndarray) -> jnp.ndarray:
+    """True where the flag selects the containment direction of IF/RF."""
+    return (flags & FLAG_IF) > 0
+
+
+def predicate_by_flag(flags: jnp.ndarray, obj: jnp.ndarray, query: jnp.ndarray) -> jnp.ndarray:
+    """Flag-driven :func:`predicate`: ``flags`` broadcasts against the
+    leading dims of ``obj``/``query`` (last axis of those has size 2).
+
+    Evaluates both containment directions and selects per element — the
+    selected lane is computed exactly as the static path computes it, so a
+    uniform-flag batch is bitwise equal to :func:`predicate`.
+    """
+    return jnp.where(
+        is_filter_flag(flags), contains(query, obj), contains(obj, query)
+    )
+
+
+def query_valid_mask_by_flag(
+    flags: jnp.ndarray, intervals: jnp.ndarray, q_intervals: jnp.ndarray
+) -> jnp.ndarray:
+    """Per-query validity of every object: (B,) x (n, 2) x (B, 2) -> (B, n)."""
+    return predicate_by_flag(
+        flags[:, None], intervals[None, :, :], q_intervals[:, None, :]
+    )
+
+
 def sample_uniform_intervals(key, n: int, dtype=jnp.float32) -> jnp.ndarray:
     """Uniform interval model of the paper's complexity analysis (§3.2, App. A):
     endpoints are two i.i.d. U(0,1) draws per object, sorted."""

@@ -3,23 +3,30 @@
 TPU adaptation (DESIGN.md §2): the per-query priority queues of the paper
 become a fixed-width ``(B, ef)`` beam advanced by a ``lax.while_loop``; the
 visited hash-set becomes an exact per-query bitmap updated with one
-deduplicated scatter-add per step; each expansion scores all ``M`` neighbors
-of the selected node in a single gather + matmul.  The search never leaves
-the query-valid subgraph — only neighbors whose semantic bit is set *and*
-whose interval satisfies the query predicate enter the beam (Alg. 4 lines
-11-20); structural heredity (Thm 4.1) is what makes this correct.
+deduplicated scatter-add per step; each expansion scores the neighbors of
+the selected nodes through the expand-score kernel.
 
-Two generations of the hot loop live here (DESIGN.md §8):
+Two generations of the hot loop live here (DESIGN.md §8/§10):
 
 * ``backend="legacy"`` — the original per-query ``vmap`` loop: one node
   expanded per step, full ``(ef + M)`` argsort per step;
 * ``backend="pallas" | "xla"`` — the fused multi-expansion pipeline: the
   whole batch steps together, each step expands the ``W`` best unexpanded
-  frontier nodes per query, scores all ``W·M`` neighbors with one gather +
-  one batched matmul, and folds them into the sorted beam with the bitonic
-  partial-merge kernel (``kernels/beam_merge.py``) instead of an argsort.
-  The two fused backends run the identical comparator network and return
-  bit-identical ids; ``xla`` is the interpretable CPU-CI reference.
+  frontier nodes per query, scores all ``W·M`` neighbors through
+  ``ops.expand_score`` (scalar-prefetch row gather on TPU — the
+  ``(B, C, d)`` candidate tensor is never materialized), dedups candidate
+  ids with the sort-based ``dedup_first`` (no ``(B, C, C)`` intermediate),
+  and folds them into the sorted beam with the bitonic partial-merge kernel
+  (``kernels/beam_merge.py``).  The two fused backends run identical
+  networks and return bit-identical ids/dists;
+  :func:`search_step_memory_profile` walks one traced step to certify the
+  quadratic intermediates are gone.
+
+Query semantics are *runtime* state (DESIGN.md §10): every query carries an
+int32 sem flag (``FLAG_IF`` for IF/RF, ``FLAG_IS`` for IS/RS) and
+:func:`beam_search_flags` jits one program — with no static semantics
+argument — that serves a mixed IF/IS/RF/RS batch.  :func:`beam_search`
+(static :class:`Semantics`) is a thin wrapper over it.
 """
 from __future__ import annotations
 
@@ -30,15 +37,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import intervals as iv
-from repro.core.entry import EntryIndex, get_entry, get_entry_batch
+from repro.core.entry import (
+    EntryIndex,
+    get_entry_batch_flags,
+    get_entry_flags,
+)
 from repro.kernels import ops
 from repro.kernels.beam_merge import PAD_PAYLOAD, next_pow2
+from repro.kernels.expand_score import dedup_first, dedup_first_quadratic
 
 
 class SearchResult(NamedTuple):
     ids: jnp.ndarray    # (B, k) int32 node ids, ascending distance, -1 pad
     dist: jnp.ndarray   # (B, k) f32 squared distances (+inf pad)
     steps: jnp.ndarray  # (B,) int32 expansion count (work metric for QPS)
+    # () int32 shared while_loop iterations of the fused batch (None where
+    # not applicable).  On lane-parallel hardware the batch-synchronous
+    # latency is iterations × per-step latency (B-independent up to the lane
+    # count), so this is the hardware-independent QPS signal the mixed-
+    # workload benchmark models (DESIGN.md §10) — the same role the
+    # comparator count plays for the merge kernel (§8).
+    iters: jnp.ndarray | None = None
 
 
 def _bitmap_test(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
@@ -65,12 +84,11 @@ def _search_one(
     q_v: jnp.ndarray,        # (d,)
     q_int: jnp.ndarray,      # (2,)
     start: jnp.ndarray,      # () int32, -1 = no valid entry
+    sem_flag: jnp.ndarray,   # () int32 FLAG_IF | FLAG_IS (runtime semantics)
     x: jnp.ndarray,          # (n, d)
     intervals: jnp.ndarray,  # (n, 2)
     nbrs: jnp.ndarray,       # (n, M)
     status: jnp.ndarray,     # (n, M) uint8
-    sem_flag: int,
-    sem_is_filter: bool,     # True for IF/RF (obj ⊆ query), False for IS/RS
     ef: int,
     max_steps: int,
 ):
@@ -97,9 +115,7 @@ def _search_one(
     visited = _bitmap_set(visited, start_c[None], has_entry[None])
 
     def predicate(obj_int):
-        if sem_is_filter:
-            return iv.contains(q_int[None, :], obj_int)
-        return iv.contains(obj_int, q_int[None, :])
+        return iv.predicate_by_flag(sem_flag, obj_int, q_int[None, :])
 
     def cond(state):
         beam_ids, beam_d, expanded, visited, steps = state
@@ -121,7 +137,7 @@ def _search_one(
         nb_c = jnp.clip(nb, 0, n - 1)
         seen = _bitmap_test(visited, nb_c) | ~present
 
-        sem_ok = (st & sem_flag) > 0
+        sem_ok = (st.astype(jnp.int32) & sem_flag) > 0
         pred_ok = predicate(intervals[nb_c])
         valid = present & ~seen & sem_ok & pred_ok
         # Visited semantics follow the σ-projection G^σ the theory searches
@@ -151,6 +167,91 @@ def _search_one(
     return beam_ids, beam_d, steps
 
 
+def _make_fused_step(
+    x: jnp.ndarray,          # (n, d)
+    intervals: jnp.ndarray,  # (n, 2)
+    nbrs: jnp.ndarray,       # (n, M)
+    status: jnp.ndarray,     # (n, M) uint8
+    q32: jnp.ndarray,        # (B, d) f32
+    q_int: jnp.ndarray,      # (B, 2)
+    sem_flags: jnp.ndarray,  # (B,) int32 runtime semantics
+    *,
+    W: int,
+    backend: str,
+):
+    """Build ``(step, score, merge)`` for the fused hot loop (§8/§10).
+
+    ``step`` advances ``(beam_d, beam_p, visited, steps)`` by one fused
+    multi-expansion; it is also what :func:`search_step_memory_profile`
+    traces, so the profiled program *is* the served program.  With
+    ``backend="legacy"`` the step runs the pre-fusion expand/dedup pair —
+    ``(B, C, d)`` gather + matmul and the ``O(C²)`` pairwise dedup — kept
+    only as the A/B baseline for that profile.
+    """
+    n, d = x.shape
+    M = nbrs.shape[1]
+    B = q32.shape[0]
+    C = W * M
+
+    bitmap_test = jax.vmap(_bitmap_test)
+    bitmap_set = jax.vmap(_bitmap_set)
+    rowi = jnp.arange(B, dtype=jnp.int32)[:, None]
+    # The partial merge has no legacy variant; the legacy expand/dedup
+    # profile reuses the xla merge network.
+    merge_backend = "xla" if backend == "legacy" else backend
+    dedup = dedup_first_quadratic if backend == "legacy" else dedup_first
+
+    def score(ids_c, valid):
+        """Squared distances of the masked candidate ids via the
+        expand-score kernel (+inf where invalid)."""
+        return ops.expand_score(
+            x, jnp.where(valid, ids_c, -1), q32, backend=backend
+        )
+
+    def predicate(obj_int):
+        return iv.predicate_by_flag(sem_flags[:, None], obj_int, q_int[:, None, :])
+
+    def merge(beam_d, beam_p, cand_d, cand_p):
+        return ops.beam_merge(beam_d, beam_p, cand_d, cand_p, backend=merge_backend)
+
+    def step(beam_d, beam_p, visited, steps):
+        # ExtractMin_W: beam is sorted, so top_k picks the W best unexpanded.
+        sel_d = jnp.where((beam_p & 1) == 0, beam_d, jnp.inf)
+        neg, sel_idx = jax.lax.top_k(-sel_d, W)            # (B, W)
+        sel_ok = jnp.isfinite(-neg)
+        u = jnp.take_along_axis(beam_p >> 1, sel_idx, axis=-1)
+        mark = jnp.zeros(beam_p.shape, jnp.int32).at[rowi, sel_idx].max(
+            sel_ok.astype(jnp.int32)
+        )
+        beam_p = beam_p | mark
+
+        u_c = jnp.clip(u, 0, n - 1)
+        nb = jnp.where(sel_ok[..., None], nbrs[u_c], -1).reshape(B, C)
+        st = status[u_c].reshape(B, C)
+        present = nb >= 0
+        nb_c = jnp.clip(nb, 0, n - 1)
+        seen = bitmap_test(visited, nb_c) | ~present
+
+        sem_ok = (st.astype(jnp.int32) & sem_flags[:, None]) > 0
+        pred_ok = predicate(intervals[nb_c])
+        cand_ok = present & ~seen & sem_ok & pred_ok
+        # Same visited semantics as the legacy path (DESIGN.md §6): mark
+        # scored and node-dead candidates, never edge-masked ones.  Across
+        # the W lists one id may repeat — score/mark only its first
+        # *eligible* occurrence so the scatter-add stays an OR.
+        valid = dedup(nb_c, cand_ok)
+        to_mark = dedup(nb_c, present & ~seen & (cand_ok | ~pred_ok))
+        visited = bitmap_set(visited, nb_c, to_mark)
+
+        cand_d = score(nb_c, valid)
+        cand_p = jnp.where(valid, nb_c << 1, PAD_PAYLOAD)
+        beam_d, beam_p = merge(beam_d, beam_p, cand_d, cand_p)
+        steps = steps + jnp.sum(sel_ok, axis=-1, dtype=jnp.int32)
+        return beam_d, beam_p, visited, steps
+
+    return step, score, merge
+
+
 def _beam_search_fused(
     x: jnp.ndarray,          # (n, d)
     intervals: jnp.ndarray,  # (n, 2)
@@ -159,9 +260,8 @@ def _beam_search_fused(
     entry_ids: jnp.ndarray,  # (B, We) int32, -1 padded
     q_v: jnp.ndarray,        # (B, d)
     q_int: jnp.ndarray,      # (B, 2)
+    sem_flags: jnp.ndarray,  # (B,) int32
     *,
-    sem_flag: int,
-    sem_is_filter: bool,
     ef: int,
     k: int,
     max_steps: int,
@@ -174,45 +274,23 @@ def _beam_search_fused(
     kept ascending under the total order ``(dist, payload)``; each payload
     packs ``id << 1 | expanded``.  Every step the ``W`` best unexpanded
     entries are expanded at once; rows whose frontier is exhausted are
-    natural no-ops, so the batch shares one ``while_loop``.
+    natural no-ops, so the batch shares one ``while_loop`` — and because
+    every per-row quantity (distances, dedup, merge, bitmap) is computed
+    row-independently, each row's result is bitwise independent of the rest
+    of the batch, which is what makes mixed-semantics batches return exactly
+    the per-semantics answers (DESIGN.md §10).
     """
     n, d = x.shape
-    M = nbrs.shape[1]
     B = q_v.shape[0]
     W = max(min(width, ef), 1)
     E = next_pow2(ef)
-    C = W * M
     nwords = (n + 31) // 32
 
     q32 = q_v.astype(jnp.float32)
-    qn = jnp.sum(q32 * q32, axis=-1)                       # (B,)
-    xn = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)      # (n,)
-
-    bitmap_test = jax.vmap(_bitmap_test)
-    bitmap_set = jax.vmap(_bitmap_set)
-
-    def score(ids_c, valid):
-        """One gather + one batched matmul: ‖q−x‖² = ‖x‖² + ‖q‖² − 2·x·q."""
-        rows = x[ids_c].astype(jnp.float32)                # (B, C, d) gather
-        ip = jnp.einsum("bcd,bd->bc", rows, q32)
-        dist = jnp.maximum(xn[ids_c] + qn[:, None] - 2.0 * ip, 0.0)
-        return jnp.where(valid, dist, jnp.inf)
-
-    def predicate(obj_int):
-        if sem_is_filter:
-            return iv.contains(q_int[:, None, :], obj_int)
-        return iv.contains(obj_int, q_int[:, None, :])
-
-    def merge(beam_d, beam_p, cand_d, cand_p):
-        return ops.beam_merge(beam_d, beam_p, cand_d, cand_p, backend=backend)
-
-    def first_occurrence(ids_c, flag):
-        """Per row, keep ``flag`` only on the first candidate slot carrying
-        each id (duplicates across the W neighbor lists collapse to one)."""
-        same = ids_c[:, :, None] == ids_c[:, None, :]      # (B, C, C)
-        idx = jnp.arange(ids_c.shape[1], dtype=jnp.int32)
-        earlier = idx[:, None] > idx[None, :]
-        return flag & ~jnp.any(same & earlier[None] & flag[:, None, :], axis=2)
+    step, score, merge = _make_fused_step(
+        x, intervals, nbrs, status, q32, q_int, sem_flags,
+        W=W, backend=backend,
+    )
 
     # ---- seed: merge the (deduped) entry batch into an empty beam
     ent_valid = entry_ids >= 0
@@ -222,9 +300,10 @@ def _beam_search_fused(
     beam_d = jnp.full((B, E), jnp.inf, jnp.float32)
     beam_p = jnp.full((B, E), PAD_PAYLOAD, jnp.int32)
     beam_d, beam_p = merge(beam_d, beam_p, ent_d, ent_p)
-    visited = bitmap_set(jnp.zeros((B, nwords), jnp.uint32), ent_c, ent_valid)
+    visited = jax.vmap(_bitmap_set)(
+        jnp.zeros((B, nwords), jnp.uint32), ent_c, ent_valid
+    )
 
-    rowi = jnp.arange(B, dtype=jnp.int32)[:, None]
     iters_cap = (max_steps + W - 1) // W
 
     def cond(state):
@@ -234,52 +313,21 @@ def _beam_search_fused(
 
     def body(state):
         beam_d, beam_p, visited, steps, it = state
-        # ExtractMin_W: beam is sorted, so top_k picks the W best unexpanded.
-        sel_d = jnp.where((beam_p & 1) == 0, beam_d, jnp.inf)
-        neg, sel_idx = jax.lax.top_k(-sel_d, W)            # (B, W)
-        sel_ok = jnp.isfinite(-neg)
-        u = jnp.take_along_axis(beam_p >> 1, sel_idx, axis=-1)
-        mark = jnp.zeros((B, E), jnp.int32).at[rowi, sel_idx].max(
-            sel_ok.astype(jnp.int32)
-        )
-        beam_p = beam_p | mark
-
-        u_c = jnp.clip(u, 0, n - 1)
-        nb = jnp.where(sel_ok[..., None], nbrs[u_c], -1).reshape(B, C)
-        st = status[u_c].reshape(B, C)
-        present = nb >= 0
-        nb_c = jnp.clip(nb, 0, n - 1)
-        seen = bitmap_test(visited, nb_c) | ~present
-
-        sem_ok = (st & sem_flag) > 0
-        pred_ok = predicate(intervals[nb_c])
-        cand_ok = present & ~seen & sem_ok & pred_ok
-        # Same visited semantics as the legacy path (DESIGN.md §6): mark
-        # scored and node-dead candidates, never edge-masked ones.  Across
-        # the W lists one id may repeat — score/mark only its first
-        # *eligible* occurrence so the scatter-add stays an OR.
-        valid = first_occurrence(nb_c, cand_ok)
-        to_mark = first_occurrence(nb_c, present & ~seen & (cand_ok | ~pred_ok))
-        visited = bitmap_set(visited, nb_c, to_mark)
-
-        cand_d = score(nb_c, valid)
-        cand_p = jnp.where(valid, nb_c << 1, PAD_PAYLOAD)
-        beam_d, beam_p = merge(beam_d, beam_p, cand_d, cand_p)
-        steps = steps + jnp.sum(sel_ok, axis=-1, dtype=jnp.int32)
+        beam_d, beam_p, visited, steps = step(beam_d, beam_p, visited, steps)
         return beam_d, beam_p, visited, steps, it + 1
 
     state = (beam_d, beam_p, visited, jnp.zeros((B,), jnp.int32), jnp.int32(0))
-    beam_d, beam_p, visited, steps, _ = jax.lax.while_loop(cond, body, state)
+    beam_d, beam_p, visited, steps, it = jax.lax.while_loop(cond, body, state)
 
     dist = beam_d[:, :k]                                   # beam is sorted
     ids = jnp.where(jnp.isfinite(dist), beam_p[:, :k] >> 1, -1)
-    return SearchResult(ids, dist, steps)
+    return SearchResult(ids, dist, steps, it)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sem", "ef", "k", "max_steps", "backend", "width")
+    jax.jit, static_argnames=("ef", "k", "max_steps", "backend", "width")
 )
-def beam_search(
+def beam_search_flags(
     x: jnp.ndarray,
     intervals: jnp.ndarray,
     nbrs: jnp.ndarray,
@@ -287,6 +335,58 @@ def beam_search(
     entry_ids: jnp.ndarray,   # (B,) or (B, We) int32 entry node(s) (Alg. 5)
     q_v: jnp.ndarray,         # (B, d)
     q_int: jnp.ndarray,       # (B, 2)
+    sem_flags: jnp.ndarray,   # (B,) int32 runtime semantics (FLAG_IF/FLAG_IS)
+    *,
+    ef: int,
+    k: int,
+    max_steps: int = 0,
+    backend: str | None = None,
+    width: int = 4,
+) -> SearchResult:
+    """Batched Alg. 4 with *runtime* per-query semantics (DESIGN.md §10).
+
+    ``sem_flags`` is a traced ``(B,)`` array — not a static argname — so one
+    compiled program serves a mixed IF/IS/RF/RS batch; ``max_steps=0``
+    derives a generous default (8·ef+32).  ``backend`` selects the hot-loop
+    implementation: ``"pallas"`` / ``"xla"`` are the fused multi-expansion
+    pipeline (bit-identical to each other; default — pallas on TPU, xla on
+    CPU), ``"legacy"`` the original one-node-per-step argsort loop.
+    ``width`` is the fused frontier width W.
+    """
+    steps_cap = max_steps if max_steps > 0 else 8 * ef + 32
+    sem_flags = sem_flags.astype(jnp.int32)
+    if backend != "legacy":
+        backend = ops.resolve_backend(backend)
+        ent = entry_ids[:, None] if entry_ids.ndim == 1 else entry_ids
+        return _beam_search_fused(
+            x, intervals, nbrs, status, ent, q_v, q_int, sem_flags,
+            ef=ef, k=k, max_steps=steps_cap, width=width, backend=backend,
+        )
+    entry_one = entry_ids if entry_ids.ndim == 1 else entry_ids[:, 0]
+    run = jax.vmap(
+        lambda qv, qi, s, f: _search_one(
+            qv, qi, s, f, x, intervals, nbrs, status,
+            ef=ef, max_steps=steps_cap,
+        )
+    )
+    beam_ids, beam_d, steps = run(q_v, q_int, entry_one, sem_flags)
+    top_d, top_i = jax.lax.top_k(-beam_d, k)
+    ids = jnp.take_along_axis(beam_ids, top_i, axis=-1)
+    dist = -top_d
+    ids = jnp.where(jnp.isfinite(dist), ids, -1)
+    # legacy expands one node per per-row loop step: the synchronous-batch
+    # iteration equivalent is the slowest row's step count.
+    return SearchResult(ids, dist, steps, jnp.max(steps))
+
+
+def beam_search(
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    nbrs: jnp.ndarray,
+    status: jnp.ndarray,
+    entry_ids: jnp.ndarray,
+    q_v: jnp.ndarray,
+    q_int: jnp.ndarray,
     *,
     sem: iv.Semantics,
     ef: int,
@@ -295,37 +395,46 @@ def beam_search(
     backend: str | None = None,
     width: int = 4,
 ) -> SearchResult:
-    """Batched Alg. 4.  ``max_steps=0`` derives a generous default (8·ef+32).
-
-    ``backend`` selects the hot-loop implementation: ``"pallas"`` /
-    ``"xla"`` are the fused multi-expansion pipeline (bit-identical to each
-    other; default — pallas on TPU, xla on CPU), ``"legacy"`` the original
-    one-node-per-step argsort loop.  ``width`` is the fused frontier width W.
-    """
-    steps_cap = max_steps if max_steps > 0 else 8 * ef + 32
-    sem_is_filter = sem in (iv.Semantics.IF, iv.Semantics.RF)
-    if backend != "legacy":
-        backend = ops.resolve_backend(backend)
-        ent = entry_ids[:, None] if entry_ids.ndim == 1 else entry_ids
-        return _beam_search_fused(
-            x, intervals, nbrs, status, ent, q_v, q_int,
-            sem_flag=sem.flag, sem_is_filter=sem_is_filter,
-            ef=ef, k=k, max_steps=steps_cap, width=width, backend=backend,
-        )
-    entry_one = entry_ids if entry_ids.ndim == 1 else entry_ids[:, 0]
-    run = jax.vmap(
-        lambda qv, qi, s: _search_one(
-            qv, qi, s, x, intervals, nbrs, status,
-            sem_flag=sem.flag, sem_is_filter=sem_is_filter,
-            ef=ef, max_steps=steps_cap,
-        )
+    """Single-semantics Alg. 4: a thin wrapper that broadcasts ``sem`` to a
+    flag array and runs the same compiled program as the mixed path."""
+    return beam_search_flags(
+        x, intervals, nbrs, status, entry_ids, q_v, q_int,
+        iv.as_sem_flags(sem, q_v.shape[0]),
+        ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
     )
-    beam_ids, beam_d, steps = run(q_v, q_int, entry_one)
-    top_d, top_i = jax.lax.top_k(-beam_d, k)
-    ids = jnp.take_along_axis(beam_ids, top_i, axis=-1)
-    dist = -top_d
-    ids = jnp.where(jnp.isfinite(dist), ids, -1)
-    return SearchResult(ids, dist, steps)
+
+
+def search_mixed(
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    nbrs: jnp.ndarray,
+    status: jnp.ndarray,
+    eidx: EntryIndex,
+    q_v: jnp.ndarray,
+    q_int: jnp.ndarray,
+    sem_flags,
+    *,
+    ef: int,
+    k: int,
+    max_steps: int = 0,
+    backend: str | None = None,
+    width: int = 4,
+) -> SearchResult:
+    """Entry acquisition (Alg. 5) + beam search (Alg. 4) for a batch whose
+    queries each carry their own semantics (DESIGN.md §10).
+
+    ``sem_flags`` accepts anything :func:`intervals.as_sem_flags` does: one
+    :class:`Semantics`, a per-query sequence, or a ``(B,)`` flag array.
+    """
+    flags = iv.as_sem_flags(sem_flags, q_v.shape[0])
+    if backend == "legacy":
+        entry_ids = get_entry_flags(eidx, q_int, flags)
+    else:
+        entry_ids = get_entry_batch_flags(eidx, q_int, flags, width=width)
+    return beam_search_flags(
+        x, intervals, nbrs, status, entry_ids, q_v, q_int, flags,
+        ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
+    )
 
 
 def search(
@@ -349,15 +458,94 @@ def search(
     The fused backends seed the beam with a ``width``-wide entry batch
     (widened Alg. 5) so the very first step already expands ``W`` nodes.
     """
-    if backend == "legacy":
-        entry_ids = get_entry(eidx, q_int, sem)
-    else:
-        entry_ids = get_entry_batch(eidx, q_int, sem, width=width)
-    return beam_search(
-        x, intervals, nbrs, status, entry_ids, q_v, q_int,
-        sem=sem, ef=ef, k=k, max_steps=max_steps,
-        backend=backend, width=width,
+    return search_mixed(
+        x, intervals, nbrs, status, eidx, q_v, q_int, sem,
+        ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
     )
+
+
+# ------------------------------------------------------------ memory profile
+def search_step_memory_profile(
+    backend: str,
+    *,
+    B: int = 8,
+    n: int = 2048,
+    d: int = 24,
+    M: int = 16,
+    width: int = 4,
+    ef: int = 32,
+) -> dict:
+    """Trace one fused search step and report its intermediate profile.
+
+    Returns ``{"peak_bytes", "gather_bcd", "quadratic_cc"}`` — whether any
+    ``(B, C, d)`` candidate gather or ``(·, C, C)`` dedup tensor is
+    materialized.  The new path (``xla``/``pallas``) must show neither; the
+    ``legacy`` expand/dedup baseline shows both (the ISSUE-3 acceptance
+    check, mirroring PR 2's ``sweep_memory_profile``).
+    """
+    from repro.kernels.prune_sweep import _iter_eqn_avals
+
+    C = max(min(width, ef), 1) * M
+    E = next_pow2(ef)
+    nwords = (n + 31) // 32
+    f32, i32 = jnp.float32, jnp.int32
+
+    def one_step(x, intervals, nbrs, status, q_v, q_int, sem_flags,
+                 beam_d, beam_p, visited, steps):
+        step, _, _ = _make_fused_step(
+            x, intervals, nbrs, status, q_v.astype(f32), q_int, sem_flags,
+            W=max(min(width, ef), 1), backend=backend,
+        )
+        return step(beam_d, beam_p, visited, steps)
+
+    args = (
+        jax.ShapeDtypeStruct((n, d), f32),
+        jax.ShapeDtypeStruct((n, 2), f32),
+        jax.ShapeDtypeStruct((n, M), i32),
+        jax.ShapeDtypeStruct((n, M), jnp.uint8),
+        jax.ShapeDtypeStruct((B, d), f32),
+        jax.ShapeDtypeStruct((B, 2), f32),
+        jax.ShapeDtypeStruct((B,), i32),
+        jax.ShapeDtypeStruct((B, E), f32),
+        jax.ShapeDtypeStruct((B, E), i32),
+        jax.ShapeDtypeStruct((B, nwords), jnp.uint32),
+        jax.ShapeDtypeStruct((B,), i32),
+    )
+    closed = jax.make_jaxpr(one_step)(*args)
+    peak = 0
+    gather_bcd = False
+    quadratic = False
+    for aval in _iter_eqn_avals(closed.jaxpr):
+        size = int(aval.size) * aval.dtype.itemsize if aval.shape else aval.dtype.itemsize
+        peak = max(peak, size)
+        if len(aval.shape) >= 3 and aval.shape[-2:] == (C, d):
+            gather_bcd = True
+        if len(aval.shape) >= 2 and aval.shape[-2:] == (C, C):
+            quadratic = True
+    return {"peak_bytes": peak, "gather_bcd": gather_bcd, "quadratic_cc": quadratic}
+
+
+# ----------------------------------------------------------------- exact
+@functools.partial(jax.jit, static_argnames=("is_filter", "k"))
+def _brute_force_block(xb, ib, q32, qn, q_int, ids, d, start, *, is_filter, k):
+    """One jitted ground-truth block step: matmul-identity distances
+    (``‖x‖²+‖q‖²−2·x·q`` — no ``(nq, block, d)`` diff tensor), predicate
+    mask, exact block top-k, fold into the running top-k."""
+    from repro.core.candidates import merge_topk
+
+    xb32 = xb.astype(jnp.float32)
+    xn = jnp.sum(xb32 * xb32, axis=-1)
+    ip = q32 @ xb32.T
+    db = jnp.maximum(qn[:, None] + xn[None, :] - 2.0 * ip, 0.0)
+    if is_filter:
+        ok = iv.contains(q_int[:, None, :], ib[None, :, :])
+    else:
+        ok = iv.contains(ib[None, :, :], q_int[:, None, :])
+    db = jnp.where(ok, db, jnp.inf)
+    take = min(k, xb.shape[0])
+    neg, idx = jax.lax.top_k(-db, take)
+    bids = start + idx.astype(jnp.int32)
+    return merge_topk(ids, d, bids, -neg, k)
 
 
 def brute_force(
@@ -370,26 +558,24 @@ def brute_force(
     k: int,
     block: int = 8192,
 ) -> SearchResult:
-    """Exact predicate-filtered top-k (ground truth for every benchmark)."""
-    from repro.core.candidates import merge_topk
+    """Exact predicate-filtered top-k (ground truth for every benchmark).
 
+    The per-block step is jitted once per block shape (full blocks share one
+    program, the remainder block at most one more) and uses the matmul
+    identity, so the harness's dominant cost at scale is one ``(nq, block)``
+    GEMM per block instead of an untraced ``(nq, block, d)`` diff tensor.
+    """
     nq = q_v.shape[0]
     n = x.shape[0]
+    q32 = q_v.astype(jnp.float32)
+    qn = jnp.sum(q32 * q32, axis=-1)
+    is_filter = sem in (iv.Semantics.IF, iv.Semantics.RF)
     ids = jnp.full((nq, k), -1, jnp.int32)
     d = jnp.full((nq, k), jnp.inf, jnp.float32)
     for s in range(0, n, block):
-        xb = x[s : s + block]
-        ib = intervals[s : s + block]
-        db = jnp.sum(
-            (q_v[:, None, :].astype(jnp.float32) - xb[None, :, :].astype(jnp.float32)) ** 2,
-            axis=-1,
+        ids, d = _brute_force_block(
+            x[s : s + block], intervals[s : s + block], q32, qn, q_int,
+            ids, d, jnp.int32(s), is_filter=is_filter, k=k,
         )
-        ok = iv.predicate(sem, ib[None, :, :], q_int[:, None, :])
-        db = jnp.where(ok, db, jnp.inf)
-        take = min(k, xb.shape[0])
-        neg, idx = jax.lax.top_k(-db, take)
-        bids = jnp.arange(s, s + xb.shape[0], dtype=jnp.int32)
-        bid = jnp.broadcast_to(bids[None, :], db.shape)
-        ids, d = merge_topk(ids, d, jnp.take_along_axis(bid, idx, axis=-1), -neg, k)
     ids = jnp.where(jnp.isfinite(d), ids, -1)
     return SearchResult(ids, d, jnp.zeros((nq,), jnp.int32))

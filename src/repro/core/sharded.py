@@ -32,8 +32,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import intervals as iv
 from repro.core.candidates import merge_topk
-from repro.core.entry import build_entry_index, get_entry, get_entry_batch
-from repro.core.search import beam_search
+from repro.core.entry import build_entry_index, get_entry_batch_flags, get_entry_flags
+from repro.core.search import beam_search_flags
 
 from repro import compat
 from repro.compat import shard_map
@@ -79,6 +79,7 @@ def make_sharded_search_fn(
     hierarchical: bool = True,
     backend: str | None = None,
     width: int = 4,
+    mixed: bool = False,
 ):
     """Build the jittable sharded search step.
 
@@ -88,19 +89,24 @@ def make_sharded_search_fn(
     intra-pod first so only ``k`` candidates per pod cross the pod axis.
     ``backend``/``width`` select the shard-local search pipeline (fused
     multi-expansion by default; see core/search.py).
+
+    With ``mixed=True`` the returned function takes one extra trailing
+    argument — a replicated ``(B,)`` int32 sem-flag array — and the single
+    compiled program serves interleaved IF/IS/RF/RS traffic (the shard-local
+    search is flag-driven either way; DESIGN.md §10).
     """
     index_axes = tuple(index_axes)
 
-    def local_search(x, ints, nbrs, status, gids, q_v, q_int):
+    def local_search(x, ints, nbrs, status, gids, q_v, q_int, sem_flags):
         # Padded rows (gids < 0) are masked out of the entry structure so a
         # pad can never be returned as an entry node (Lemma 4.3 soundness).
         eidx = build_entry_index(ints, node_mask=gids >= 0)
         if backend == "legacy":
-            entry = get_entry(eidx, q_int, sem)
+            entry = get_entry_flags(eidx, q_int, sem_flags)
         else:
-            entry = get_entry_batch(eidx, q_int, sem, width=width)
-        res = beam_search(
-            x, ints, nbrs, status, entry, q_v, q_int, sem=sem, ef=ef, k=k,
+            entry = get_entry_batch_flags(eidx, q_int, sem_flags, width=width)
+        res = beam_search_flags(
+            x, ints, nbrs, status, entry, q_v, q_int, sem_flags, ef=ef, k=k,
             backend=backend, width=width,
         )
         nloc = x.shape[0]
@@ -120,8 +126,8 @@ def make_sharded_search_fn(
             jnp.take_along_axis(gd, order, axis=-1),
         )
 
-    def sharded(x, ints, nbrs, status, gids, q_v, q_int):
-        ids, dist = local_search(x, ints, nbrs, status, gids, q_v, q_int)
+    def sharded(x, ints, nbrs, status, gids, q_v, q_int, sem_flags):
+        ids, dist = local_search(x, ints, nbrs, status, gids, q_v, q_int, sem_flags)
         if hierarchical:
             # innermost (fast, intra-pod) axis first, then outer axes.
             for ax in reversed(index_axes):
@@ -134,10 +140,19 @@ def make_sharded_search_fn(
 
     row = P(tuple(index_axes))
     rep = P()
+    if mixed:
+        body, in_specs = sharded, (row,) * 5 + (rep, rep, rep)
+    else:
+        # Static-semantics signature (7 args): flags broadcast from ``sem``.
+        def body(x, ints, nbrs, status, gids, q_v, q_int):
+            flags = jnp.full(q_v.shape[:1], sem.flag, jnp.int32)
+            return sharded(x, ints, nbrs, status, gids, q_v, q_int, flags)
+
+        in_specs = (row,) * 5 + (rep, rep)
     fn = shard_map(
-        sharded,
+        body,
         mesh=mesh,
-        in_specs=(row, row, row, row, row, rep, rep),
+        in_specs=in_specs,
         out_specs=(rep, rep),
         check_vma=False,
     )

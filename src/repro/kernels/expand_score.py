@@ -1,0 +1,189 @@
+"""Fused expand-score kernel for the beam-search hot loop (Alg. 4 inner).
+
+Every fused search step scores the ``C = W·M`` neighbor candidates of the
+``W`` expanded frontier nodes against the query.  The pre-fusion path
+materialized the full ``(B, C, d)`` candidate gather in HBM and ran one
+batched matmul over it — at serving shapes (``B`` in the thousands,
+``C = 128–512``, ``d`` up to 1536) that gather is the dominant per-step HBM
+traffic of the query side, the exact quadratic-intermediate pattern the
+build sweep already eliminated (DESIGN.md §9 → §10).
+
+Three backends, dispatched via :func:`repro.kernels.ops.expand_score`:
+
+* ``pallas`` — scalar-prefetch row gather: the ``(B, C)`` candidate ids are
+  scalar-prefetched, and the corpus BlockSpec's ``index_map`` *reads them*
+  to choose which ``(1, d)`` row to DMA from HBM for each ``(b, c)`` grid
+  step.  The gather happens in the pipeline — each row fetch overlaps the
+  previous step's compute — and the ``(B, C, d)`` tensor never exists.
+  The query row block is reused across the ``C`` inner steps (same block
+  index → no re-fetch).
+* ``xla`` — the interpretable CPU-CI twin: a ``fori_loop`` over
+  ``chunk``-wide candidate slices, peak intermediate ``(B, chunk, d)``.
+* ``legacy`` — the pre-fusion baseline (full gather + matmul identity),
+  kept for A/B profiling in ``bench_mixed_workload``.
+
+Bit-identity contract (same reasoning as the prune sweep, DESIGN.md §9):
+the fused backends compute each distance as an *elementwise*
+square-difference sum over the feature axis, which is bitwise invariant
+under any row blocking — per-row results do not depend on ``B``, ``C``,
+the ``chunk`` width, or the batch composition.  That invariance is what
+lets one mixed-semantics batch return bit-identical distances to four
+per-semantics batches (DESIGN.md §10).  ``legacy`` uses the matmul
+identity ``‖x‖² + ‖q‖² − 2·x·q`` whose reduction order is shape-dependent,
+so it is only ever compared with ``allclose``.
+
+Also here: the sort-based per-row first-occurrence dedup that replaces the
+``O(C²)`` pairwise mask the search loop used to build twice per step (sort
+by id, mask equal-adjacent, unsort — ``O(C log C)``, no ``(B, C, C)``
+intermediate).  This module absorbs the former ``kernels/gather_dist.py``
+(:func:`gather_sq_dist` is the same scalar-prefetch kernel, kept under its
+historical name for the kernel microbenches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.util import compiler_params
+
+
+# ------------------------------------------------------------------ pallas
+def _kernel(idx_ref, q_ref, x_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)    # (1, d)
+    x = x_ref[...].astype(jnp.float32)    # (1, d) — the row idx_ref[b, c] chose
+    diff = q - x
+    o_ref[0, 0] = jnp.sum(diff * diff)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def expand_score(
+    x: jnp.ndarray,     # (n, d) corpus (stays in HBM; rows DMA'd on demand)
+    idx: jnp.ndarray,   # (B, C) int32 candidate ids (-1 = masked/padding)
+    q: jnp.ndarray,     # (B, d) queries
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Squared L2 between ``q[b]`` and ``x[idx[b, c]]``; ``+inf`` where
+    ``idx < 0``.  One ``(1, d)`` corpus-row DMA per candidate, scheduled by
+    the scalar-prefetched index array — no ``(B, C, d)`` intermediate."""
+    B, C = idx.shape
+    d = x.shape[1]
+    safe = jnp.clip(idx, 0, x.shape[0] - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, C),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, c, idx_ref: (b, 0)),
+            pl.BlockSpec((1, d), lambda b, c, idx_ref: (idx_ref[b, c], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, c, idx_ref: (b, c)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        compiler_params=compiler_params(("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(safe, q, x)
+    return jnp.where(idx >= 0, out, jnp.inf)
+
+
+# Historical name from the absorbed kernels/gather_dist.py (microbenches,
+# kernel sweep tests): same kernel, same semantics.
+gather_sq_dist = expand_score
+
+
+# --------------------------------------------------------------------- xla
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def expand_score_xla(
+    x: jnp.ndarray,     # (n, d)
+    idx: jnp.ndarray,   # (B, C) int32, -1 = masked
+    q: jnp.ndarray,     # (B, d)
+    *,
+    chunk: int = 32,
+) -> jnp.ndarray:
+    """CPU-CI twin of :func:`expand_score`: identical elementwise network,
+    traced as a ``fori_loop`` over ``chunk``-wide candidate slices so the
+    peak intermediate is ``(B, chunk, d)`` — never ``(B, C, d)``.
+
+    Bit-identical to the Pallas kernel for any ``chunk`` (elementwise
+    per-row reduction; see module docstring)."""
+    B, C = idx.shape
+    n, d = x.shape
+    q32 = q.astype(jnp.float32)
+    # Never a single full-width chunk: chunk == C would materialize exactly
+    # the (B, C, d) gather this twin exists to avoid.
+    chunk = max(min(chunk, (C + 1) // 2 if C > 1 else 1), 1)
+    Cp = ((C + chunk - 1) // chunk) * chunk
+    safe = jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+    if Cp != C:
+        safe = jnp.pad(safe, ((0, 0), (0, Cp - C)))
+
+    def body(t, acc):
+        sl = jax.lax.dynamic_slice_in_dim(safe, t * chunk, chunk, axis=1)
+        rows = x[sl].astype(jnp.float32)               # (B, chunk, d)
+        diff = q32[:, None, :] - rows
+        dc = jnp.sum(diff * diff, axis=-1)             # (B, chunk)
+        return jax.lax.dynamic_update_slice_in_dim(acc, dc, t * chunk, axis=1)
+
+    out = jax.lax.fori_loop(
+        0, Cp // chunk, body, jnp.zeros((B, Cp), jnp.float32)
+    )[:, :C]
+    return jnp.where(idx >= 0, out, jnp.inf)
+
+
+# ------------------------------------------------------------------ legacy
+@jax.jit
+def expand_score_legacy(x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Pre-fusion baseline: materialize the ``(B, C, d)`` gather, score with
+    the matmul identity.  Kept for the A/B memory/QPS profile only."""
+    n = x.shape[0]
+    q32 = q.astype(jnp.float32)
+    qn = jnp.sum(q32 * q32, axis=-1)
+    xn = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+    safe = jnp.clip(idx, 0, n - 1)
+    rows = x[safe].astype(jnp.float32)                 # (B, C, d) gather
+    ip = jnp.einsum("bcd,bd->bc", rows, q32)
+    dist = jnp.maximum(xn[safe] + qn[:, None] - 2.0 * ip, 0.0)
+    return jnp.where(idx >= 0, dist, jnp.inf)
+
+
+# ------------------------------------------------------------------- dedup
+def dedup_first(ids: jnp.ndarray, flag: jnp.ndarray) -> jnp.ndarray:
+    """Per row, keep ``flag`` only on the first (lowest-index) flagged slot
+    carrying each id — sort-based, ``O(C log C)``, no ``(·, C, C)`` tensor.
+
+    Unflagged slots neither survive nor suppress later duplicates (they sort
+    behind an id sentinel).  The stable argsort breaks equal-id ties by the
+    original slot index, so "first of each sorted run" is exactly "lowest
+    original index", matching :func:`dedup_first_quadratic` bit-for-bit.
+    Integer-only: the id sort never touches the distance floats, which is
+    why the search's bit-identity contract survives it (DESIGN.md §10).
+    """
+    sentinel = jnp.iinfo(jnp.int32).max
+    key = jnp.where(flag, ids.astype(jnp.int32), sentinel)
+    order = jnp.argsort(key, axis=-1, stable=True)
+    sk = jnp.take_along_axis(key, order, axis=-1)
+    run_start = jnp.concatenate(
+        [jnp.ones(sk.shape[:-1] + (1,), bool), sk[..., 1:] != sk[..., :-1]],
+        axis=-1,
+    )
+    keep_sorted = run_start & (sk != sentinel)
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(keep_sorted, inv, axis=-1)
+
+
+def dedup_first_quadratic(ids: jnp.ndarray, flag: jnp.ndarray) -> jnp.ndarray:
+    """The pre-fusion ``O(C²)`` pairwise-mask dedup (two ``(·, C, C)``
+    boolean intermediates per call) — the oracle/baseline ``dedup_first``
+    must match bit-for-bit."""
+    C = ids.shape[-1]
+    same = ids[..., :, None] == ids[..., None, :]          # (..., C, C)
+    slot = jnp.arange(C, dtype=jnp.int32)
+    earlier = slot[:, None] > slot[None, :]
+    return flag & ~jnp.any(same & earlier & flag[..., None, :], axis=-1)

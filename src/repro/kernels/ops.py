@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels import beam_merge as beam_merge_mod
-from repro.kernels import fused_scan, gather_dist, l2dist
+from repro.kernels import expand_score as expand_score_mod
+from repro.kernels import fused_scan, l2dist
 from repro.kernels import prune_sweep as prune_sweep_mod
 from repro.kernels.util import on_cpu
 
@@ -46,9 +47,29 @@ def filtered_topk(
     )
 
 
+def expand_score(
+    x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray, *, backend: str | None = None
+) -> jnp.ndarray:
+    """Beam-expansion scoring: squared L2 between ``q[b]`` and ``x[idx[b,c]]``
+    (``+inf`` where ``idx < 0``).
+
+    ``pallas`` scalar-prefetches the id array and DMAs one ``(1, d)`` corpus
+    row per candidate (gather in the pipeline, never materialized); ``xla``
+    is the bit-identical chunked elementwise twin; ``legacy`` the pre-fusion
+    ``(B, C, d)`` gather + matmul baseline kept for A/B profiling.
+    """
+    resolved = resolve_backend(backend, choices=("pallas", "xla", "legacy"))
+    if resolved == "legacy":
+        return expand_score_mod.expand_score_legacy(x, idx, q)
+    if resolved == "xla":
+        return expand_score_mod.expand_score_xla(x, idx, q)
+    return expand_score_mod.expand_score(x, idx, q, interpret=on_cpu())
+
+
 def gather_sq_dist(x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """Beam-expansion scoring via scalar-prefetch row gather."""
-    return gather_dist.gather_sq_dist(x, idx, q, interpret=on_cpu())
+    """Beam-expansion scoring via scalar-prefetch row gather (historical
+    name from the absorbed ``kernels/gather_dist.py``)."""
+    return expand_score_mod.gather_sq_dist(x, idx, q, interpret=on_cpu())
 
 
 def prune_sweep(

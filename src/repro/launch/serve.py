@@ -39,6 +39,10 @@ def main(argv=None) -> int:
                     help="search pipeline (default: fused; pallas on TPU, xla on CPU)")
     ap.add_argument("--width", type=int, default=4,
                     help="fused multi-expansion frontier width W")
+    ap.add_argument("--mixed", action="store_true",
+                    help="also serve one interleaved IF/IS/RF/RS stream "
+                         "through the runtime-semantics path and compare "
+                         "against four per-semantics batches")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -96,6 +100,55 @@ def main(argv=None) -> int:
         qps = args.queries / dt
         print(f"[serve] {sem.value}: recall@{args.k} {r:.3f}  "
               f"QPS {qps:,.0f}  mean hops {float(res.steps.mean()):.1f}")
+
+    # 4) mixed workload: every request carries its own semantics; one
+    #    compiled program serves the interleaved stream (DESIGN.md §10)
+    if args.mixed:
+        cycle = [Semantics.IF, Semantics.IS, Semantics.RS, Semantics.RF]
+        sems = [cycle[i % 4] for i in range(args.queries)]
+        is_rs = jnp.asarray([s is Semantics.RS for s in sems])
+        qmix = jnp.where(is_rs[:, None], point, wide)
+
+        def run_mixed():
+            return engine.retrieve_mixed(None, qmix, sems, ef=args.ef,
+                                         k=args.k, q_v=qv)
+
+        res = run_mixed()  # warmup/compile
+        t0 = time.perf_counter()
+        res = run_mixed()
+        jax.block_until_ready(res.ids)
+        dt_mixed = time.perf_counter() - t0
+
+        subsets = {s: [i for i, ss in enumerate(sems) if ss is s] for s in cycle}
+
+        # keyed by sem value: enum keys are not sortable as a jax pytree
+        def run_split():
+            return {s.value: engine.retrieve(None, qmix[jnp.asarray(sel)],
+                                             sem=s, ef=args.ef, k=args.k,
+                                             q_v=qv[jnp.asarray(sel)])
+                    for s, sel in subsets.items()}
+
+        outs = run_split()  # warmup/compile
+        t0 = time.perf_counter()
+        outs = run_split()
+        jax.block_until_ready(outs)  # all four batches, not just the last
+        dt_split = time.perf_counter() - t0
+
+        recs = []
+        for s, sel in subsets.items():
+            sel = jnp.asarray(sel)
+            gt = idx.ground_truth(qv[sel], qmix[sel], sem=s, k=args.k)
+            part = type(res)(res.ids[sel], res.dist[sel], res.steps[sel])
+            recs.append(f"{s.value}={recall(part, gt):.3f}")
+        # batch-synchronous iteration counts: the hardware-independent QPS
+        # signal (CPU wall-clock is B-linear per iteration; DESIGN.md §10)
+        it_mixed = int(res.iters)
+        it_split = sum(int(outs[s.value].iters) for s in cycle)
+        print(f"[serve] mixed 4-semantics stream: QPS {args.queries/dt_mixed:,.0f} "
+              f"vs split-by-semantics QPS {args.queries/dt_split:,.0f} "
+              f"({dt_split/dt_mixed:.2f}x wall)  sync iters {it_mixed} vs "
+              f"{it_split} ({it_split/max(it_mixed, 1):.2f}x)  "
+              f"recall@{args.k} {' '.join(recs)}")
     return 0
 
 

@@ -7,12 +7,17 @@ what populates the paper's unified interval-aware index (the retrieval
 deployment in launch/serve.py: embed → UG search under IF/IS/RF/RS).
 ``attach_index`` + ``retrieve`` close the loop: token batch in, interval-
 aware top-k out, routed through the fused multi-expansion search kernel
-(DESIGN.md §8) on the configured backend.
+(DESIGN.md §8) on the configured backend.  ``retrieve_mixed`` is the
+production mixed-workload path: each request in the batch carries its own
+IF/IS/RF/RS semantics, and the batch is padded to a shape bucket so
+interleaved traffic of any composition and size reuses a small fixed set of
+compiled programs — semantics are runtime state, never a compile key
+(DESIGN.md §10).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Any
+from typing import TYPE_CHECKING, Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +29,19 @@ if TYPE_CHECKING:  # avoid a hard serve -> core import at module load
     from repro.core import Semantics, UGIndex
     from repro.core.search import SearchResult
 
+# Request-count buckets for ``retrieve_mixed``: a batch of B requests is
+# padded to the smallest bucket ≥ B (beyond the table: the next multiple of
+# the largest bucket), so mixed traffic compiles one program per bucket.
+BATCH_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+def bucket_batch_size(b: int, buckets: Sequence[int] = BATCH_BUCKETS) -> int:
+    for s in buckets:
+        if b <= s:
+            return s
+    top = buckets[-1]
+    return ((b + top - 1) // top) * top
+
 
 @dataclasses.dataclass
 class ServeEngine:
@@ -34,7 +52,6 @@ class ServeEngine:
     search_width: int = 4               # fused frontier width W
 
     def __post_init__(self):
-        cfg = self.model.cfg
         self._decode = jax.jit(
             lambda p, s, t: self.model.decode_step(p, s, t)
         )
@@ -76,6 +93,52 @@ class ServeEngine:
             backend=self.search_backend, width=self.search_width,
         )
 
+    def retrieve_mixed(
+        self,
+        query_tokens: jnp.ndarray | None,  # (B, S) int32; None with q_v=
+        q_int: jnp.ndarray,                # (B, 2) query validity intervals
+        sem_flags,                         # per-request Semantics / flags
+        *,
+        ef: int = 64,
+        k: int = 10,
+        mask: jnp.ndarray | None = None,
+        q_v: jnp.ndarray | None = None,    # precomputed embeddings (skip embed)
+    ) -> "SearchResult":
+        """Mixed-workload retrieval: one batch, per-request semantics.
+
+        The batch is padded to the next :data:`BATCH_BUCKETS` size — pad
+        rows carry an unsatisfiable IF window ``[2, -2]`` so Alg. 5
+        certifies NULL and they are no-ops in the shared ``while_loop`` —
+        then sliced back, so interleaved IF/IS/RF/RS traffic of any
+        composition hits one compiled program per bucket and never
+        recompiles on the semantics mix (DESIGN.md §10).
+        """
+        if self.index is None:
+            raise ValueError("no index attached; call attach_index() first")
+        from repro.core import FLAG_IF, as_sem_flags
+
+        qv = q_v if q_v is not None else self.embed(query_tokens, mask)
+        qv = jnp.asarray(qv)
+        q_int = jnp.asarray(q_int)
+        B = qv.shape[0]
+        flags = as_sem_flags(sem_flags, B)
+        Bp = bucket_batch_size(B)
+        if Bp != B:
+            pad = Bp - B
+            qv = jnp.concatenate([qv, jnp.zeros((pad, qv.shape[1]), qv.dtype)])
+            dead = jnp.broadcast_to(
+                jnp.asarray([2.0, -2.0], q_int.dtype), (pad, 2)
+            )
+            q_int = jnp.concatenate([q_int, dead])
+            flags = jnp.concatenate([flags, jnp.full((pad,), FLAG_IF, jnp.int32)])
+        res = self.index.search_mixed(
+            qv, q_int, flags, ef=ef, k=k,
+            backend=self.search_backend, width=self.search_width,
+        )
+        if Bp != B:
+            res = type(res)(res.ids[:B], res.dist[:B], res.steps[:B], res.iters)
+        return res
+
     # ------------------------------------------------------------- embed
     def _embed_impl(self, params, tokens, mask):
         hidden, _, _ = self.model.forward(params, tokens)
@@ -100,8 +163,10 @@ class ServeEngine:
         seed: int = 0,
     ) -> jnp.ndarray:
         """Greedy (or sampled) continuation; prompt is fed token-by-token
-        through the decode path (exactly the serve_step the dry-run lowers)."""
-        cfg = self.model.cfg
+        through the decode path (exactly the serve_step the dry-run lowers —
+        the decode caches are position-stepped, so multi-token prefill would
+        need a per-family cache bridge; only the final prompt logits are
+        kept)."""
         B, S = prompts.shape
         state = self.model.init_decode_state(self.params, B, S + max_new)
         key = jax.random.key(seed)

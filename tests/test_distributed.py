@@ -54,6 +54,20 @@ gt = brute_force(jnp.asarray(x), jnp.asarray(ints), qv, qi, sem=iv.Semantics.IF,
 r = recall(SearchResult(ids, dist, None), gt)
 assert r >= 0.9, r
 
+# mixed runtime-semantics sharded search: one program, per-query flags;
+# rows must equal the corresponding static-semantics program bit-for-bit
+fnm = make_sharded_search_fn(mesh, index_axes=("data",), sem=iv.Semantics.IF,
+                             ef=48, k=10, mixed=True)
+flags = jnp.asarray([iv.FLAG_IF, iv.FLAG_IS] * (nq // 2), jnp.int32)
+ids_m, dist_m = fnm(*arrs, qv, qi, flags)
+fn_is = make_sharded_search_fn(mesh, index_axes=("data",), sem=iv.Semantics.IS, ef=48, k=10)
+ids_is, dist_is = fn_is(*arrs, qv, qi)
+f_np = np.asarray(flags)
+for sel, ref_ids, ref_d in ((f_np == iv.FLAG_IF, ids, dist),
+                            (f_np == iv.FLAG_IS, ids_is, dist_is)):
+    assert np.array_equal(np.asarray(ids_m)[sel], np.asarray(ref_ids)[sel])
+    assert np.array_equal(np.asarray(dist_m)[sel], np.asarray(ref_d)[sel])
+
 ring = make_ring_knn_fn(mesh, axis="data", k=8)
 row = NamedSharding(mesh, P(("data",)))
 ri, rd = ring(jax.device_put(xs, row), jax.device_put(gid, row))

@@ -1,0 +1,126 @@
+"""Expand-score kernel (beam-expansion scoring) + sort-based dedup tests.
+
+The contract (DESIGN.md §10): the ``pallas`` scalar-prefetch kernel and the
+``xla`` chunked twin run the identical elementwise network and must be
+**bit-identical** (not merely allclose) for any shape and chunking — that
+invariance is what makes mixed-semantics batches return exactly the
+per-semantics answers.  ``legacy`` (the pre-fusion gather+matmul baseline)
+is only allclose.  The traced-step memory profile certifies the quadratic
+intermediates — the ``(B, C, d)`` candidate gather and the ``(·, C, C)``
+dedup masks — exist only on the legacy path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.search import search_step_memory_profile
+from repro.kernels import ops, ref
+from repro.kernels.expand_score import (
+    dedup_first,
+    dedup_first_quadratic,
+    expand_score_xla,
+)
+
+
+def make_case(seed, B, C, n, d):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    x = jax.random.normal(ks[0], (n, d))
+    q = jax.random.normal(ks[1], (B, d))
+    idx = jax.random.randint(ks[2], (B, C), -1, n)
+    return x, idx, q
+
+
+@pytest.mark.parametrize("B,C,n,d", [(2, 4, 50, 8), (9, 16, 200, 32),
+                                     (1, 64, 1000, 128), (7, 33, 123, 17),
+                                     (3, 128, 400, 24)])
+def test_backends_bitwise_and_oracle(B, C, n, d):
+    x, idx, q = make_case(B * C, B, C, n, d)
+    out_x = ops.expand_score(x, idx, q, backend="xla")
+    out_p = ops.expand_score(x, idx, q, backend="pallas")
+    out_l = ops.expand_score(x, idx, q, backend="legacy")
+    # fused backends: bit-identical (elementwise per-row network)
+    assert np.array_equal(np.asarray(out_x), np.asarray(out_p))
+    # oracle (elementwise gather ref) and legacy (matmul identity): allclose
+    expect = ref.gather_sq_dist(x, idx, q)
+    finite = np.isfinite(np.asarray(expect))
+    for out in (out_x, out_l):
+        assert (np.isfinite(np.asarray(out)) == finite).all()
+        np.testing.assert_allclose(
+            np.where(finite, np.asarray(out), 0),
+            np.where(finite, np.asarray(expect), 0), atol=1e-4,
+        )
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 32, 200])
+def test_xla_chunk_invariance(chunk):
+    """Any chunking of the candidate axis is bitwise invisible — the claim
+    the mixed-batch bit-identity contract rests on."""
+    x, idx, q = make_case(11, 5, 37, 300, 19)
+    base = expand_score_xla(x, idx, q, chunk=32)
+    out = expand_score_xla(x, idx, q, chunk=chunk)
+    assert np.array_equal(np.asarray(base), np.asarray(out))
+
+
+def test_batch_composition_invariance():
+    """Per-row results do not depend on which other rows share the batch."""
+    x, idx, q = make_case(13, 8, 24, 150, 12)
+    full = np.asarray(ops.expand_score(x, idx, q, backend="xla"))
+    for rows in ([0], [3, 5], [7, 0, 2]):
+        sel = np.asarray(rows)
+        sub = np.asarray(ops.expand_score(x, idx[sel], q[sel], backend="xla"))
+        assert np.array_equal(full[sel], sub)
+
+
+def _dedup_oracle(ids, flag):
+    """Literal first-eligible-occurrence semantics, per row in python."""
+    out = np.zeros_like(flag)
+    for b in range(ids.shape[0]):
+        seen = set()
+        for t in range(ids.shape[1]):
+            if flag[b, t] and int(ids[b, t]) not in seen:
+                out[b, t] = True
+                seen.add(int(ids[b, t]))
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dedup_sort_matches_quadratic(seed):
+    """Sort-based dedup == the O(C²) pairwise mask == the python oracle,
+    bit-for-bit, under heavy id collision."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 6))
+    C = int(rng.integers(1, 48))
+    ids = rng.integers(0, max(C // 3, 2), (B, C)).astype(np.int32)
+    flag = rng.uniform(size=(B, C)) < 0.6
+    got = np.asarray(dedup_first(jnp.asarray(ids), jnp.asarray(flag)))
+    quad = np.asarray(dedup_first_quadratic(jnp.asarray(ids), jnp.asarray(flag)))
+    assert np.array_equal(got, quad)
+    assert np.array_equal(got, _dedup_oracle(ids, flag))
+
+
+def test_dedup_unflagged_slots_do_not_suppress():
+    """An unflagged earlier duplicate must not shadow a later flagged one."""
+    ids = jnp.asarray([[4, 4, 4]], jnp.int32)
+    flag = jnp.asarray([[False, True, True]])
+    out = np.asarray(dedup_first(ids, flag))
+    assert out.tolist() == [[False, True, False]]
+
+
+def test_step_profile_no_quadratic_on_new_path():
+    """ISSUE-3 acceptance: one traced fused search step materializes neither
+    the (B, C, d) candidate gather nor any (·, C, C) dedup tensor on the new
+    backends; the legacy expand/dedup pair shows both."""
+    # width=1 shrinks C to M, which must not collapse the xla twin into a
+    # single full-width chunk (that would be the banned gather)
+    for backend in ("xla", "pallas"):
+        for width in (1, 4):
+            prof = search_step_memory_profile(backend, width=width)
+            assert not prof["gather_bcd"], (backend, width)
+            assert not prof["quadratic_cc"], (backend, width)
+    legacy = search_step_memory_profile("legacy")
+    assert legacy["gather_bcd"] and legacy["quadratic_cc"]
+    # and fusion actually shrinks the peak live intermediate
+    assert search_step_memory_profile("xla")["peak_bytes"] < legacy["peak_bytes"]

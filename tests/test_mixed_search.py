@@ -1,0 +1,204 @@
+"""Mixed-batch parity suite: runtime semantics (DESIGN.md §10).
+
+The headline contract of the runtime-semantics path: a shuffled IF/IS/RF/RS
+batch through one compiled program returns **bitwise-identical** ids, dists
+and step counts to four per-semantics ``beam_search`` calls — across both
+fused backends, both frontier widths, and the legacy loop.  Also here: the
+flag-driven entry acquisition parity, NULL-row behavior inside a mixed
+batch, and the shape-bucketed ``ServeEngine.retrieve_mixed`` serving path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Semantics, UGConfig, UGIndex, as_sem_flags, recall
+from repro.core import intervals as iv
+from repro.core.entry import (
+    build_entry_index,
+    get_entry,
+    get_entry_batch,
+    get_entry_batch_flags,
+    get_entry_flags,
+)
+
+CYCLE = [Semantics.IF, Semantics.IS, Semantics.RS, Semantics.RF]
+
+
+@pytest.fixture(scope="module")
+def mixed_index():
+    """Small UG kept cheap enough for pallas interpret mode (M stays small)."""
+    k1, k2 = jax.random.split(jax.random.key(7))
+    n, d = 400, 12
+    x = jax.random.normal(k1, (n, d))
+    ints = iv.sample_uniform_intervals(k2, n)
+    cfg = UGConfig(ef_spatial=16, ef_attribute=32, max_edges_if=12,
+                   max_edges_is=12, iterations=2, repair_width=8,
+                   exact_spatial=True, block=512)
+    return UGIndex.build(x, ints, cfg)
+
+
+@pytest.fixture(scope="module")
+def mixed_queries(mixed_index):
+    """16 queries, semantics cycling IF/IS/RS/RF then shuffled."""
+    nq = 16
+    k1, k2 = jax.random.split(jax.random.key(17))
+    qv = jax.random.normal(k1, (nq, mixed_index.x.shape[1]))
+    c = jax.random.uniform(k2, (nq, 1))
+    wide = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
+    point = jnp.concatenate([c, c], axis=1)
+    order = np.random.default_rng(3).permutation(nq)
+    sems = [CYCLE[i % 4] for i in order]
+    qm = jnp.where(jnp.asarray([s is Semantics.RS for s in sems])[:, None],
+                   point, wide)
+    return qv, qm, sems
+
+
+def _subsets(sems):
+    return {s: np.asarray([i for i, ss in enumerate(sems) if ss is s])
+            for s in CYCLE}
+
+
+@pytest.mark.parametrize("backend,width", [
+    ("xla", 1), ("xla", 4), ("pallas", 1), ("pallas", 4),
+])
+def test_mixed_matches_per_semantics_bitwise(mixed_index, mixed_queries, backend, width):
+    """One mixed program == four per-semantics programs, bit for bit."""
+    qv, qm, sems = mixed_queries
+    res = mixed_index.search_mixed(qv, qm, sems, ef=32, k=10,
+                                   backend=backend, width=width)
+    for s, sel in _subsets(sems).items():
+        ref = mixed_index.search(qv[sel], qm[sel], sem=s, ef=32, k=10,
+                                 backend=backend, width=width)
+        assert np.array_equal(np.asarray(res.ids)[sel], np.asarray(ref.ids)), s
+        assert np.array_equal(np.asarray(res.dist)[sel], np.asarray(ref.dist)), s
+        assert np.array_equal(np.asarray(res.steps)[sel], np.asarray(ref.steps)), s
+
+
+def test_mixed_matches_per_semantics_legacy(mixed_index, mixed_queries):
+    """The legacy vmap loop is flag-driven too (one program, no static sem)."""
+    qv, qm, sems = mixed_queries
+    res = mixed_index.search_mixed(qv, qm, sems, ef=32, k=10, backend="legacy")
+    for s, sel in _subsets(sems).items():
+        ref = mixed_index.search(qv[sel], qm[sel], sem=s, ef=32, k=10,
+                                 backend="legacy")
+        assert np.array_equal(np.asarray(res.ids)[sel], np.asarray(ref.ids)), s
+        assert np.array_equal(np.asarray(res.dist)[sel], np.asarray(ref.dist)), s
+
+
+def test_mixed_recall_against_ground_truth(mixed_index, mixed_queries):
+    """The mixed program is still a good ANN index, per semantics.
+
+    Thresholds are calibrated to this deliberately tiny fixture (n=400,
+    degree 12, kept small for pallas interpret mode): wide-window IS is
+    connectivity-limited here for *every* backend including legacy — the
+    production-scale ≥0.9 floor lives in test_recall_regression.py, and the
+    bitwise parity tests above transfer it to the mixed path verbatim."""
+    qv, qm, sems = mixed_queries
+    res = mixed_index.search_mixed(qv, qm, sems, ef=64, k=10)
+    floor = {Semantics.IF: 0.9, Semantics.RF: 0.9,
+             Semantics.RS: 0.85, Semantics.IS: 0.3}
+    for s, sel in _subsets(sems).items():
+        gt = mixed_index.ground_truth(qv[sel], qm[sel], sem=s, k=10)
+        part = type(res)(res.ids[sel], res.dist[sel], res.steps[sel])
+        assert recall(part, gt) >= floor[s], s
+
+
+def test_mixed_null_rows_stay_null(mixed_index, mixed_queries):
+    """Unsatisfiable rows inside a mixed batch return all -1 without
+    perturbing their neighbors (no-op rows in the shared while_loop)."""
+    qv, qm, sems = mixed_queries
+    qdead = qm.at[3].set(jnp.asarray([2.0, -2.0]))  # IF window below any l
+    sems = list(sems)
+    sems[3] = Semantics.IF
+    res = mixed_index.search_mixed(qv, qdead, sems, ef=32, k=10)
+    assert bool((res.ids[3] == -1).all())
+    # other rows equal the same batch without the dead row's query changed
+    keep = [i for i in range(qv.shape[0]) if i != 3]
+    ref = mixed_index.search_mixed(qv[np.asarray(keep)], qdead[np.asarray(keep)],
+                                   [sems[i] for i in keep], ef=32, k=10)
+    assert np.array_equal(np.asarray(res.ids)[keep], np.asarray(ref.ids))
+
+
+def test_as_sem_flags_forms():
+    flags = as_sem_flags(Semantics.IS, 3)
+    assert flags.tolist() == [iv.FLAG_IS] * 3
+    flags = as_sem_flags([Semantics.IF, Semantics.RS], 2)
+    assert flags.tolist() == [iv.FLAG_IF, iv.FLAG_IS]
+    flags = as_sem_flags(jnp.asarray([1, 2, 1]), 3)
+    assert flags.dtype == jnp.int32
+    with pytest.raises(ValueError):
+        as_sem_flags([Semantics.IF], 2)
+    # flag 0 would silently NULL every row: host-side values are validated
+    with pytest.raises(ValueError):
+        as_sem_flags([0, 1], 2)
+    with pytest.raises(ValueError):
+        as_sem_flags(np.asarray([1, 3]), 2)
+
+
+def test_predicate_by_flag_matches_static():
+    k1, k2 = jax.random.split(jax.random.key(5))
+    obj = iv.sample_uniform_intervals(k1, 64)
+    q = iv.sample_uniform_intervals(k2, 64)
+    for sem in (Semantics.IF, Semantics.IS):
+        flags = jnp.full((64,), sem.flag, jnp.int32)
+        got = iv.predicate_by_flag(flags, obj, q)
+        assert np.array_equal(np.asarray(got), np.asarray(iv.predicate(sem, obj, q)))
+    mask = iv.query_valid_mask_by_flag(
+        jnp.asarray([iv.FLAG_IF, iv.FLAG_IS], jnp.int32), obj, q[:2])
+    assert np.array_equal(np.asarray(mask[0]),
+                          np.asarray(iv.query_valid_mask(Semantics.IF, obj, q[0])))
+    assert np.array_equal(np.asarray(mask[1]),
+                          np.asarray(iv.query_valid_mask(Semantics.IS, obj, q[1])))
+
+
+def test_entry_flags_parity(mixed_index, mixed_queries):
+    """Flag-driven Alg. 5 == the static branch, single and widened."""
+    qv, qm, sems = mixed_queries
+    eidx = mixed_index.entry
+    flags = as_sem_flags(sems, qm.shape[0])
+    one = np.asarray(get_entry_flags(eidx, qm, flags))
+    batch = np.asarray(get_entry_batch_flags(eidx, qm, flags, width=4))
+    for s, sel in _subsets(sems).items():
+        assert np.array_equal(one[sel], np.asarray(get_entry(eidx, qm[sel], s)))
+        assert np.array_equal(
+            batch[sel], np.asarray(get_entry_batch(eidx, qm[sel], s, width=4)))
+
+
+def test_entry_flags_masked_index(mixed_index):
+    """Flag path respects node masks (sharded pad-row soundness)."""
+    ints = mixed_index.intervals
+    mask = jnp.arange(ints.shape[0]) < 100
+    eidx = build_entry_index(ints, node_mask=mask)
+    # IF: the whole domain; IS: a point query (a wide IS window may have no
+    # containing object at all, which would be a correct NULL)
+    q = jnp.asarray([[0.0, 1.0], [0.5, 0.5]], jnp.float32)
+    flags = jnp.asarray([iv.FLAG_IF, iv.FLAG_IS], jnp.int32)
+    ids = np.asarray(get_entry_flags(eidx, q, flags))
+    assert (ids >= 0).all() and (ids < 100).all()
+
+
+def test_serve_engine_retrieve_mixed_bucketing(mixed_index, mixed_queries):
+    """The bucketed serving path pads to a bucket shape and returns exactly
+    the unpadded mixed-search answers (retrieval is model-independent when
+    embeddings are precomputed)."""
+    from repro.serve.engine import ServeEngine, bucket_batch_size
+
+    assert bucket_batch_size(1) == 8
+    assert bucket_batch_size(8) == 8
+    assert bucket_batch_size(9) == 16
+    assert bucket_batch_size(5000) == 5120
+
+    qv, qm, sems = mixed_queries
+    engine = ServeEngine.__new__(ServeEngine)  # no LM tower needed here
+    engine.index = None
+    engine.search_backend = "xla"
+    engine.search_width = 4
+    engine.attach_index(mixed_index)
+    B = 13  # forces padding to the 16-bucket
+    res = engine.retrieve_mixed(None, qm[:B], sems[:B], ef=32, k=10, q_v=qv[:B])
+    assert res.ids.shape == (B, 10)
+    ref = mixed_index.search_mixed(qv[:B], qm[:B], sems[:B], ef=32, k=10,
+                                   backend="xla", width=4)
+    assert np.array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    assert np.array_equal(np.asarray(res.dist), np.asarray(ref.dist))
