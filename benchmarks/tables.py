@@ -356,6 +356,104 @@ def bench_build(sizes=(1000, 2000, 4000), backends=("legacy", "xla", "pallas")):
     return rows
 
 
+# ------------------------------------------------- streaming updates (churn)
+def bench_updates(n=common.N_DEFAULT, churn=0.1, require_recall_gap=None):
+    """Streaming-update subsystem (DESIGN.md §11): churn throughput +
+    recall-vs-fresh-rebuild across all four semantics.
+
+    Deletes ``churn·n`` random nodes (tombstone + iterative repair), inserts
+    ``churn·n`` fresh ones through the batched jitted pipeline, and compares
+    recall@10 on the mutated index against a from-scratch rebuild over the
+    same live corpus.  ``require_recall_gap`` (used by ``run.py --smoke``)
+    asserts ``recall_mutated ≥ recall_fresh − gap`` per semantics.
+
+    Also asserted: the traced-jaxpr profile of the insert and repair
+    programs — the fused path must materialize no ``(·, C, C)`` witness /
+    dedup tensor and no ``(B, C, d)`` search / bridge gather, while
+    ``legacy`` (pre-fusion prune + expand baselines) shows both.
+    """
+    from repro.core.updates import update_memory_profile
+
+    rows = []
+    for backend in ("legacy", "xla", "pallas"):
+        prof = update_memory_profile(backend)
+        if backend != "legacy":
+            assert not prof["quadratic_cc"] and not prof["gather_bcd"], (
+                f"{backend} update pipeline materializes a quadratic "
+                f"intermediate")
+        rows.append(common.row(
+            f"updates_profile_{backend}", 0.0,
+            f"peak_intermediate_bytes={prof['peak_bytes']} "
+            f"cc_witness={'yes' if prof['quadratic_cc'] else 'no'} "
+            f"bcd_gather={'yes' if prof['gather_bcd'] else 'no'}"))
+
+    x, ints = common.corpus(n)
+    k_new = jax.random.key(1234)
+    b = max(int(n * churn), 1)
+    new_x = jax.random.normal(jax.random.fold_in(k_new, 0), (b, x.shape[1]))
+    from repro.core import intervals as iv_mod
+
+    new_iv = iv_mod.sample_uniform_intervals(jax.random.fold_in(k_new, 1), b)
+    rng = np.random.default_rng(42)
+    dels = jnp.asarray(rng.choice(n, size=b, replace=False).astype(np.int32))
+
+    idx0 = UGIndex.build(x, ints, common.UG_CFG)
+
+    # timed churn (one warmup pass for jit, then the measured pass); the
+    # UGIndex dataclass is not a pytree, so block on the graph explicitly
+    def run_del():
+        out = idx0.delete(dels)
+        jax.block_until_ready(out.graph.nbrs)
+        return out
+
+    dt_del, idx_d = common.timed(run_del, warmup=1, iters=1)
+
+    def run_ins():
+        out = idx_d.insert(new_x, new_iv)
+        jax.block_until_ready(out.graph.nbrs)
+        return out
+
+    dt_ins, idx_m = common.timed(run_ins, warmup=1, iters=1)
+    rows.append(common.row(
+        "updates_delete_batch", 1e6 * dt_del / b,
+        f"deletes_per_s={b/dt_del:.0f} batch={b} live={idx_m.n}"))
+    rows.append(common.row(
+        "updates_insert_batch", 1e6 * dt_ins / b,
+        f"inserts_per_s={b/dt_ins:.0f} batch={b} capacity={idx_m.capacity}"))
+
+    # fresh rebuild over the mutated corpus (the recall yardstick)
+    keep = np.setdiff1d(np.arange(n), np.asarray(dels))
+    x_f = jnp.concatenate([x[jnp.asarray(keep)], new_x])
+    iv_f = jnp.concatenate([ints[jnp.asarray(keep)], new_iv])
+    idx_f = UGIndex.build(x_f, iv_f, common.UG_CFG)
+
+    qv, qi = common.queries("uniform", n=n)
+    _, qpoint = common.queries("point", n=n)
+    worst = 0.0
+    for sem, q in [
+        (Semantics.IF, qi), (Semantics.IS, qi),
+        (Semantics.RS, qpoint), (Semantics.RF, qi),
+    ]:
+        dt_q, res = common.timed(
+            lambda: idx_m.search(qv, q, sem=sem, ef=96, k=10))
+        r_mut = recall(res, idx_m.ground_truth(qv, q, sem=sem, k=10))
+        r_fresh = recall(
+            idx_f.search(qv, q, sem=sem, ef=96, k=10),
+            idx_f.ground_truth(qv, q, sem=sem, k=10),
+        )
+        gap = r_fresh - r_mut
+        worst = max(worst, gap)
+        rows.append(common.row(
+            f"updates_churn_{sem.value.lower()}", 1e6 * dt_q / qv.shape[0],
+            f"recall={r_mut:.3f} recall_fresh_rebuild={r_fresh:.3f} "
+            f"gap={gap:+.3f} qps={qv.shape[0]/dt_q:.0f}"))
+    if require_recall_gap is not None:
+        assert worst <= require_recall_gap, (
+            f"churned-index recall trails a fresh rebuild by {worst:.3f} "
+            f"(allowed {require_recall_gap})")
+    return rows
+
+
 # ---------------------------------------------------------------- kernels
 def bench_kernels():
     """Pallas kernels (interpret mode on CPU — relative numbers only) vs jnp."""

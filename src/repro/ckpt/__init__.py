@@ -1,2 +1,5 @@
-"""Sharded checkpointing with async save and elastic restore."""
-from repro.ckpt.store import AsyncCheckpointer, latest_step, restore, save
+"""Sharded checkpointing with async save, elastic restore, and UGIndex
+round-trip (streaming allocator state included; DESIGN.md §11)."""
+from repro.ckpt.store import (
+    AsyncCheckpointer, latest_step, restore, restore_index, save, save_index,
+)

@@ -12,6 +12,10 @@ from repro.core.search import (
     SearchResult, beam_search, beam_search_flags, brute_force, search,
     search_mixed,
 )
+from repro.core.updates import (
+    compact, delete_batch, insert, insert_batch, repair_deleted,
+    update_memory_profile,
+)
 
 __all__ = [
     "FLAG_BOTH", "FLAG_IF", "FLAG_IS", "Semantics", "as_sem_flags",
@@ -20,4 +24,6 @@ __all__ = [
     "get_entry_batch", "get_entry_batch_flags", "get_entry_flags",
     "UGIndex", "recall", "SearchResult", "beam_search", "beam_search_flags",
     "brute_force", "search", "search_mixed",
+    "compact", "delete_batch", "insert", "insert_batch", "repair_deleted",
+    "update_memory_profile",
 ]

@@ -26,14 +26,22 @@ from repro.core.search import search_mixed as core_search_mixed
 
 @dataclasses.dataclass
 class UGIndex:
-    """Unified graph index: corpus, intervals, graph, entry structure."""
+    """Unified graph index: corpus, intervals, graph, entry structure.
 
-    x: jnp.ndarray            # (n, d)
-    intervals: jnp.ndarray    # (n, 2)
+    Arrays are sized to ``capacity`` slots; ``alive`` marks the live nodes
+    and ``free`` the slots the streaming allocator may hand out again
+    (DESIGN.md §11).  A freshly built or loaded static index leaves both
+    ``None`` (all slots live, none free) and pays zero masking cost.
+    """
+
+    x: jnp.ndarray            # (cap, d)
+    intervals: jnp.ndarray    # (cap, 2)
     graph: DenseGraph
     entry: EntryIndex
     config: UGConfig
     build_seconds: float = 0.0
+    alive: jnp.ndarray | None = None   # (cap,) bool; None = all live
+    free: jnp.ndarray | None = None    # (cap,) bool; None = none free
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -73,7 +81,7 @@ class UGIndex:
             self.x, self.intervals, self.graph.nbrs, self.graph.status,
             self.entry, jnp.asarray(q_v), jnp.asarray(q_int),
             sem=sem, ef=ef, k=k, max_steps=max_steps,
-            backend=backend, width=width,
+            backend=backend, width=width, alive=self.alive,
         )
 
     def search_mixed(
@@ -96,30 +104,65 @@ class UGIndex:
             self.x, self.intervals, self.graph.nbrs, self.graph.status,
             self.entry, jnp.asarray(q_v), jnp.asarray(q_int), sem_flags,
             ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
+            alive=self.alive,
         )
 
     def ground_truth(self, q_v, q_int, *, sem: iv.Semantics, k: int) -> SearchResult:
         return brute_force(
-            self.x, self.intervals, jnp.asarray(q_v), jnp.asarray(q_int), sem=sem, k=k
+            self.x, self.intervals, jnp.asarray(q_v), jnp.asarray(q_int),
+            sem=sem, k=k, alive=self.alive,
         )
+
+    # ---------------------------------------------------------------- updates
+    def insert(self, new_x, new_intervals, **kw) -> "UGIndex":
+        """Batched streaming insert (DESIGN.md §11); returns a new UGIndex."""
+        from repro.core.updates import insert_batch
+
+        return insert_batch(self, new_x, new_intervals, **kw)
+
+    def delete(self, ids, **kw) -> "UGIndex":
+        """Batched tombstone delete + iterative repair; returns a new UGIndex."""
+        from repro.core.updates import delete_batch
+
+        return delete_batch(self, ids, **kw)
+
+    def compact(self) -> "UGIndex":
+        """Physically drop dead slots and remap the graph (DESIGN.md §11)."""
+        from repro.core.updates import compact
+
+        return compact(self)
 
     # ------------------------------------------------------------------ stats
     @property
-    def n(self) -> int:
+    def capacity(self) -> int:
+        """Allocated slots (live + tombstoned + free)."""
         return self.x.shape[0]
+
+    @property
+    def n(self) -> int:
+        """Live node count (== capacity for a static index)."""
+        if self.alive is None:
+            return self.x.shape[0]
+        return int(jnp.sum(self.alive))
 
     def memory_bytes(self) -> int:
         g = self.graph
+        masks = 0 if self.alive is None else 2 * self.x.shape[0]
         return int(
             g.nbrs.size * g.nbrs.dtype.itemsize
             + g.status.size * g.status.dtype.itemsize
             + self.entry.l_sorted.size * 4 * 6
+            + masks
         )
 
     def degree_stats(self) -> dict:
         g = self.graph
         d_if = np.asarray(g.degree(iv.FLAG_IF))
         d_is = np.asarray(g.degree(iv.FLAG_IS))
+        if self.alive is not None:  # stats over live rows only
+            live = np.asarray(self.alive)
+            d_if = d_if[live]
+            d_is = d_is[live]
         return {
             "mean_if": float(d_if.mean()),
             "mean_is": float(d_is.mean()),
@@ -132,13 +175,19 @@ class UGIndex:
     def save(self, path: str | pathlib.Path) -> None:
         path = pathlib.Path(path)
         path.mkdir(parents=True, exist_ok=True)
-        np.savez_compressed(
-            path / "index.npz",
+        arrays = dict(
             x=np.asarray(self.x),
             intervals=np.asarray(self.intervals),
             nbrs=np.asarray(self.graph.nbrs),
             status=np.asarray(self.graph.status),
         )
+        if self.alive is not None:
+            arrays["alive"] = np.asarray(self.alive)
+            arrays["free"] = (
+                np.zeros(arrays["alive"].shape, bool) if self.free is None
+                else np.asarray(self.free)
+            )
+        np.savez_compressed(path / "index.npz", **arrays)
         meta = dataclasses.asdict(self.config)
         meta["build_seconds"] = self.build_seconds
         (path / "meta.json").write_text(json.dumps(meta, indent=2))
@@ -153,7 +202,10 @@ class UGIndex:
         x = jnp.asarray(blob["x"])
         intervals = jnp.asarray(blob["intervals"])
         graph = DenseGraph(jnp.asarray(blob["nbrs"]), jnp.asarray(blob["status"]))
-        return cls(x, intervals, graph, build_entry_index(intervals), cfg, build_seconds)
+        alive = jnp.asarray(blob["alive"]) if "alive" in blob.files else None
+        free = jnp.asarray(blob["free"]) if "free" in blob.files else None
+        entry = build_entry_index(intervals, node_mask=alive)
+        return cls(x, intervals, graph, entry, cfg, build_seconds, alive, free)
 
 
 def recall(result: SearchResult, truth: SearchResult) -> float:

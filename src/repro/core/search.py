@@ -27,6 +27,13 @@ int32 sem flag (``FLAG_IF`` for IF/RF, ``FLAG_IS`` for IS/RS) and
 :func:`beam_search_flags` jits one program — with no static semantics
 argument — that serves a mixed IF/IS/RF/RS batch.  :func:`beam_search`
 (static :class:`Semantics`) is a thin wrapper over it.
+
+Tombstones (DESIGN.md §11): ``alive`` is an optional ``(n,)`` bool mask.
+Tombstoned nodes (``alive=False``) are scored and traversed exactly like
+live nodes — deleting a node must not disconnect the monotone paths that
+run through it — but they are filtered at result extraction, so they can
+*route* and never *surface*.  ``alive=None`` (static index) skips the
+masking entirely and is bit-identical to the pre-tombstone pipeline.
 """
 from __future__ import annotations
 
@@ -261,6 +268,7 @@ def _beam_search_fused(
     q_v: jnp.ndarray,        # (B, d)
     q_int: jnp.ndarray,      # (B, 2)
     sem_flags: jnp.ndarray,  # (B,) int32
+    alive: jnp.ndarray | None,  # (n,) bool tombstone mask (None = all live)
     *,
     ef: int,
     k: int,
@@ -319,8 +327,21 @@ def _beam_search_fused(
     state = (beam_d, beam_p, visited, jnp.zeros((B,), jnp.int32), jnp.int32(0))
     beam_d, beam_p, visited, steps, it = jax.lax.while_loop(cond, body, state)
 
-    dist = beam_d[:, :k]                                   # beam is sorted
-    ids = jnp.where(jnp.isfinite(dist), beam_p[:, :k] >> 1, -1)
+    if alive is None:
+        dist = beam_d[:, :k]                               # beam is sorted
+        ids = jnp.where(jnp.isfinite(dist), beam_p[:, :k] >> 1, -1)
+        return SearchResult(ids, dist, steps, it)
+    # Tombstone extraction: dead beam entries routed during the loop but must
+    # never surface.  The beam is sorted ascending and top_k breaks ties by
+    # position, so with an all-live mask this selects exactly beam[:, :k]
+    # (bit-identical to the static-index path).
+    all_ids = beam_p >> 1
+    ok = jnp.isfinite(beam_d) & alive[jnp.clip(all_ids, 0, n - 1)]
+    neg, sel = jax.lax.top_k(-jnp.where(ok, beam_d, jnp.inf), k)
+    dist = -neg
+    ids = jnp.where(
+        jnp.isfinite(dist), jnp.take_along_axis(all_ids, sel, axis=-1), -1
+    )
     return SearchResult(ids, dist, steps, it)
 
 
@@ -336,6 +357,7 @@ def beam_search_flags(
     q_v: jnp.ndarray,         # (B, d)
     q_int: jnp.ndarray,       # (B, 2)
     sem_flags: jnp.ndarray,   # (B,) int32 runtime semantics (FLAG_IF/FLAG_IS)
+    alive: jnp.ndarray | None = None,  # (n,) bool tombstone mask
     *,
     ef: int,
     k: int,
@@ -351,7 +373,8 @@ def beam_search_flags(
     implementation: ``"pallas"`` / ``"xla"`` are the fused multi-expansion
     pipeline (bit-identical to each other; default — pallas on TPU, xla on
     CPU), ``"legacy"`` the original one-node-per-step argsort loop.
-    ``width`` is the fused frontier width W.
+    ``width`` is the fused frontier width W.  ``alive`` is the tombstone
+    mask (DESIGN.md §11): dead nodes route but never surface.
     """
     steps_cap = max_steps if max_steps > 0 else 8 * ef + 32
     sem_flags = sem_flags.astype(jnp.int32)
@@ -359,7 +382,7 @@ def beam_search_flags(
         backend = ops.resolve_backend(backend)
         ent = entry_ids[:, None] if entry_ids.ndim == 1 else entry_ids
         return _beam_search_fused(
-            x, intervals, nbrs, status, ent, q_v, q_int, sem_flags,
+            x, intervals, nbrs, status, ent, q_v, q_int, sem_flags, alive,
             ef=ef, k=k, max_steps=steps_cap, width=width, backend=backend,
         )
     entry_one = entry_ids if entry_ids.ndim == 1 else entry_ids[:, 0]
@@ -370,6 +393,12 @@ def beam_search_flags(
         )
     )
     beam_ids, beam_d, steps = run(q_v, q_int, entry_one, sem_flags)
+    if alive is not None:  # tombstoned beam entries never surface
+        n = x.shape[0]
+        beam_d = jnp.where(
+            (beam_ids >= 0) & alive[jnp.clip(beam_ids, 0, n - 1)],
+            beam_d, jnp.inf,
+        )
     top_d, top_i = jax.lax.top_k(-beam_d, k)
     ids = jnp.take_along_axis(beam_ids, top_i, axis=-1)
     dist = -top_d
@@ -394,12 +423,13 @@ def beam_search(
     max_steps: int = 0,
     backend: str | None = None,
     width: int = 4,
+    alive: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Single-semantics Alg. 4: a thin wrapper that broadcasts ``sem`` to a
     flag array and runs the same compiled program as the mixed path."""
     return beam_search_flags(
         x, intervals, nbrs, status, entry_ids, q_v, q_int,
-        iv.as_sem_flags(sem, q_v.shape[0]),
+        iv.as_sem_flags(sem, q_v.shape[0]), alive,
         ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
     )
 
@@ -419,12 +449,16 @@ def search_mixed(
     max_steps: int = 0,
     backend: str | None = None,
     width: int = 4,
+    alive: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Entry acquisition (Alg. 5) + beam search (Alg. 4) for a batch whose
     queries each carry their own semantics (DESIGN.md §10).
 
     ``sem_flags`` accepts anything :func:`intervals.as_sem_flags` does: one
     :class:`Semantics`, a per-query sequence, or a ``(B,)`` flag array.
+    ``alive`` is the tombstone mask; the caller is responsible for passing
+    an entry structure built with the matching ``node_mask`` so Alg. 5
+    never certifies a dead node (see UGIndex.delete).
     """
     flags = iv.as_sem_flags(sem_flags, q_v.shape[0])
     if backend == "legacy":
@@ -432,7 +466,7 @@ def search_mixed(
     else:
         entry_ids = get_entry_batch_flags(eidx, q_int, flags, width=width)
     return beam_search_flags(
-        x, intervals, nbrs, status, entry_ids, q_v, q_int, flags,
+        x, intervals, nbrs, status, entry_ids, q_v, q_int, flags, alive,
         ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
     )
 
@@ -452,6 +486,7 @@ def search(
     max_steps: int = 0,
     backend: str | None = None,
     width: int = 4,
+    alive: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Entry acquisition (Alg. 5) + interval-aware beam search (Alg. 4).
 
@@ -461,6 +496,7 @@ def search(
     return search_mixed(
         x, intervals, nbrs, status, eidx, q_v, q_int, sem,
         ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
+        alive=alive,
     )
 
 
@@ -527,10 +563,11 @@ def search_step_memory_profile(
 
 # ----------------------------------------------------------------- exact
 @functools.partial(jax.jit, static_argnames=("is_filter", "k"))
-def _brute_force_block(xb, ib, q32, qn, q_int, ids, d, start, *, is_filter, k):
+def _brute_force_block(xb, ib, mb, q32, qn, q_int, ids, d, start, *, is_filter, k):
     """One jitted ground-truth block step: matmul-identity distances
     (``‖x‖²+‖q‖²−2·x·q`` — no ``(nq, block, d)`` diff tensor), predicate
-    mask, exact block top-k, fold into the running top-k."""
+    mask, exact block top-k, fold into the running top-k.  ``mb`` is the
+    block's alive mask (tombstoned/free slots never enter the truth set)."""
     from repro.core.candidates import merge_topk
 
     xb32 = xb.astype(jnp.float32)
@@ -541,7 +578,7 @@ def _brute_force_block(xb, ib, q32, qn, q_int, ids, d, start, *, is_filter, k):
         ok = iv.contains(q_int[:, None, :], ib[None, :, :])
     else:
         ok = iv.contains(ib[None, :, :], q_int[:, None, :])
-    db = jnp.where(ok, db, jnp.inf)
+    db = jnp.where(ok & mb[None, :], db, jnp.inf)
     take = min(k, xb.shape[0])
     neg, idx = jax.lax.top_k(-db, take)
     bids = start + idx.astype(jnp.int32)
@@ -557,6 +594,7 @@ def brute_force(
     sem: iv.Semantics,
     k: int,
     block: int = 8192,
+    alive: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Exact predicate-filtered top-k (ground truth for every benchmark).
 
@@ -564,18 +602,21 @@ def brute_force(
     program, the remainder block at most one more) and uses the matmul
     identity, so the harness's dominant cost at scale is one ``(nq, block)``
     GEMM per block instead of an untraced ``(nq, block, d)`` diff tensor.
+    ``alive`` restricts the truth set to live nodes (DESIGN.md §11).
     """
     nq = q_v.shape[0]
     n = x.shape[0]
     q32 = q_v.astype(jnp.float32)
     qn = jnp.sum(q32 * q32, axis=-1)
+    if alive is None:
+        alive = jnp.ones((n,), bool)
     is_filter = sem in (iv.Semantics.IF, iv.Semantics.RF)
     ids = jnp.full((nq, k), -1, jnp.int32)
     d = jnp.full((nq, k), jnp.inf, jnp.float32)
     for s in range(0, n, block):
         ids, d = _brute_force_block(
-            x[s : s + block], intervals[s : s + block], q32, qn, q_int,
-            ids, d, jnp.int32(s), is_filter=is_filter, k=k,
+            x[s : s + block], intervals[s : s + block], alive[s : s + block],
+            q32, qn, q_int, ids, d, jnp.int32(s), is_filter=is_filter, k=k,
         )
     ids = jnp.where(jnp.isfinite(d), ids, -1)
     return SearchResult(ids, d, jnp.zeros((nq,), jnp.int32))

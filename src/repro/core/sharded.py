@@ -98,16 +98,21 @@ def make_sharded_search_fn(
     index_axes = tuple(index_axes)
 
     def local_search(x, ints, nbrs, status, gids, q_v, q_int, sem_flags):
-        # Padded rows (gids < 0) are masked out of the entry structure so a
-        # pad can never be returned as an entry node (Lemma 4.3 soundness).
-        eidx = build_entry_index(ints, node_mask=gids >= 0)
+        # Rows with gids < 0 are pads OR shard-level tombstones (a streaming
+        # delete flips the row's gid to -1): both are masked out of the
+        # entry structure so they can never be certified by Alg. 5
+        # (Lemma 4.3 soundness), and the same mask threads into the beam
+        # search as the alive mask — tombstoned rows still route traffic
+        # through their edges but never surface (DESIGN.md §11).
+        alive = gids >= 0
+        eidx = build_entry_index(ints, node_mask=alive)
         if backend == "legacy":
             entry = get_entry_flags(eidx, q_int, sem_flags)
         else:
             entry = get_entry_batch_flags(eidx, q_int, sem_flags, width=width)
         res = beam_search_flags(
-            x, ints, nbrs, status, entry, q_v, q_int, sem_flags, ef=ef, k=k,
-            backend=backend, width=width,
+            x, ints, nbrs, status, entry, q_v, q_int, sem_flags, alive,
+            ef=ef, k=k, backend=backend, width=width,
         )
         nloc = x.shape[0]
         g = jnp.where(res.ids >= 0, gids[jnp.clip(res.ids, 0, nloc - 1)], -1)

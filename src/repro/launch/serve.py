@@ -43,6 +43,10 @@ def main(argv=None) -> int:
                     help="also serve one interleaved IF/IS/RF/RS stream "
                          "through the runtime-semantics path and compare "
                          "against four per-semantics batches")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="churn demo: delete 10%% of the corpus and upsert "
+                         "replacement docs through the streaming update "
+                         "subsystem (DESIGN.md §11), then re-evaluate recall")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -149,6 +153,41 @@ def main(argv=None) -> int:
               f"({dt_split/dt_mixed:.2f}x wall)  sync iters {it_mixed} vs "
               f"{it_split} ({it_split/max(it_mixed, 1):.2f}x)  "
               f"recall@{args.k} {' '.join(recs)}")
+
+    # 5) dynamic churn: the streaming update subsystem (DESIGN.md §11) —
+    #    tombstone deletes + iterative repair, then bucketed upserts; the
+    #    same index keeps serving all four semantics without a rebuild
+    if args.dynamic:
+        import numpy as np
+
+        n_churn = max(args.docs // 10, 1)
+        rng = np.random.default_rng(5)
+        dead = jnp.asarray(
+            rng.choice(args.docs, size=n_churn, replace=False).astype(np.int32)
+        )
+        t0 = time.perf_counter()
+        engine.remove(dead)
+        jax.block_until_ready(engine.index.graph.nbrs)
+        dt_del = time.perf_counter() - t0
+        new_tokens = jax.random.randint(
+            jax.random.fold_in(k_doc, 9), (n_churn, args.doc_len), 0, cfg.vocab
+        )
+        new_iv = iv.sample_uniform_intervals(jax.random.fold_in(k_iv, 9), n_churn)
+        t0 = time.perf_counter()
+        engine.upsert(new_tokens, new_iv)
+        jax.block_until_ready(engine.index.graph.nbrs)
+        dt_ins = time.perf_counter() - t0
+        idx2 = engine.index
+        print(f"[serve] dynamic churn: {n_churn} deletes in {dt_del:.1f}s "
+              f"({n_churn/dt_del:,.0f}/s), {n_churn} upserts in {dt_ins:.1f}s "
+              f"({n_churn/dt_ins:,.0f}/s); {idx2.n} live of "
+              f"{idx2.capacity} slots")
+        for sem, qint in [(Semantics.IF, wide), (Semantics.IS, wide)]:
+            res = engine.retrieve(None, qint, sem=sem, ef=args.ef, k=args.k,
+                                  q_v=qv)
+            gt = idx2.ground_truth(qv, qint, sem=sem, k=args.k)
+            print(f"[serve] {sem.value} after churn: "
+                  f"recall@{args.k} {recall(res, gt):.3f}")
     return 0
 
 

@@ -139,6 +139,72 @@ class ServeEngine:
             res = type(res)(res.ids[:B], res.dist[:B], res.steps[:B], res.iters)
         return res
 
+    # ----------------------------------------------------------- streaming
+    def upsert(
+        self,
+        doc_tokens: jnp.ndarray | None,    # (B, S) int32; None with x=
+        intervals: jnp.ndarray,            # (B, 2) validity intervals
+        *,
+        mask: jnp.ndarray | None = None,
+        x: jnp.ndarray | None = None,      # precomputed embeddings (skip embed)
+    ) -> jnp.ndarray:
+        """Embed and insert a document batch into the attached index.
+
+        Each chunk is padded to the next :data:`BATCH_BUCKETS` size so
+        streaming traffic of any size reuses a small fixed set of compiled
+        insert programs per capacity; pad rows carry ``valid=False`` and
+        allocate nothing (DESIGN.md §11).  Nodes of one insert batch are
+        mutually invisible during candidate acquisition (candidates come
+        from the pre-insert live set), so a batch large relative to the
+        live corpus is split into chunks of at most half the current live
+        count — earlier chunks become candidates and offer targets for
+        later ones.  Returns the inserted count (== B).  The engine's index
+        reference is replaced (functional update), so readers of
+        ``self.index`` always see a consistent graph.
+        """
+        if self.index is None:
+            raise ValueError("no index attached; call attach_index() first")
+        xv = x if x is not None else self.embed(doc_tokens, mask)
+        xv = jnp.atleast_2d(jnp.asarray(xv))
+        intervals = jnp.atleast_2d(jnp.asarray(intervals))
+        B = xv.shape[0]
+        s = 0
+        while s < B:
+            limit = max(self.index.n // 2, 64)
+            xc = xv[s : s + limit]
+            ic = intervals[s : s + limit]
+            b = xc.shape[0]
+            Bp = bucket_batch_size(b)
+            valid = jnp.arange(Bp) < b
+            if Bp != b:
+                pad = Bp - b
+                xc = jnp.concatenate(
+                    [xc, jnp.zeros((pad, xc.shape[1]), xc.dtype)])
+                dead = jnp.broadcast_to(
+                    jnp.asarray([2.0, -2.0], ic.dtype), (pad, 2)
+                )
+                ic = jnp.concatenate([ic, dead])
+            self.index = self.index.insert(
+                xc, ic, valid=valid,
+                search_backend=self.search_backend, width=self.search_width,
+            )
+            s += b
+        return B
+
+    def remove(self, ids, *, repair: bool = True) -> int:
+        """Delete documents by id from the attached index (tombstone +
+        iterative repair; ``repair=False`` defers the repair sweep).  The
+        id batch is padded to a shape bucket with ``-1`` no-op rows."""
+        if self.index is None:
+            raise ValueError("no index attached; call attach_index() first")
+        ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
+        B = ids.shape[0]
+        Bp = bucket_batch_size(B)
+        if Bp != B:
+            ids = jnp.concatenate([ids, jnp.full((Bp - B,), -1, jnp.int32)])
+        self.index = self.index.delete(ids, repair=repair)
+        return B
+
     # ------------------------------------------------------------- embed
     def _embed_impl(self, params, tokens, mask):
         hidden, _, _ = self.model.forward(params, tokens)

@@ -22,6 +22,14 @@ import pytest
 from repro.core import intervals as iv
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "hermetic: property/parity suites the no-hypothesis CI job runs "
+        "(selected by marker — never by a hardcoded file list)",
+    )
+
+
 @pytest.fixture(scope="session")
 def small_corpus():
     """(x, intervals) for exact-URNG scale tests (n=220, d=8)."""

@@ -17,6 +17,9 @@ from hypothesis import strategies as st
 
 from repro.core.build import scatter_repairs
 from repro.core.prune import _dedup_sorted_by_distance
+import pytest
+
+pytestmark = pytest.mark.hermetic  # runs in the no-hypothesis CI job
 
 
 # ------------------------------------------------------------------ oracles

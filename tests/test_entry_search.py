@@ -12,6 +12,8 @@ from repro.core.exact import build_exact
 from repro.core.index import UGIndex, recall
 from repro.core.search import brute_force, search
 
+pytestmark = pytest.mark.hermetic  # runs in the no-hypothesis CI job
+
 unit = st.floats(0, 1, allow_nan=False, width=32)
 
 

@@ -23,6 +23,8 @@ from repro.kernels.expand_score import (
     expand_score_xla,
 )
 
+pytestmark = pytest.mark.hermetic  # runs in the no-hypothesis CI job
+
 
 def make_case(seed, B, C, n, d):
     ks = jax.random.split(jax.random.key(seed), 3)

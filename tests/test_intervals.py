@@ -4,6 +4,9 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import intervals as iv
+import pytest
+
+pytestmark = pytest.mark.hermetic  # runs in the no-hypothesis CI job
 
 finite = st.floats(-10, 10, allow_nan=False, allow_infinity=False, width=32)
 

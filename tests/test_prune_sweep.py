@@ -18,6 +18,8 @@ from repro.core.prune import unified_prune
 from repro.kernels import ops
 from repro.kernels import prune_sweep as ps
 
+pytestmark = pytest.mark.hermetic  # runs in the no-hypothesis CI job
+
 BACKENDS = ("legacy", "xla", "pallas")
 # Exactly f32-representable alphas so α² is bit-identical in every backend
 # and in the float64 oracle.
