@@ -132,6 +132,9 @@ def main(argv=None) -> None:
         ("updates", lambda: tables.bench_updates(
             **({"n": n} if n else {}),
             require_recall_gap=0.05 if args.smoke else None)),
+        ("memory", lambda: tables.bench_memory(
+            **({"n": n} if n else {}),
+            require_reduction=3.0 if args.smoke else None)),
         ("kernels", tables.bench_kernels),
         ("lm_steps", tables.bench_lm_steps),
     ]

@@ -454,6 +454,56 @@ def bench_updates(n=common.N_DEFAULT, churn=0.1, require_recall_gap=None):
     return rows
 
 
+# ------------------------------------------------- vector-plane memory tiers
+def bench_memory(n=common.N_DEFAULT, require_reduction=None):
+    """Bytes/vector + recall per vector plane (DESIGN.md §12).
+
+    One graph, four stores: the f32 scan plane, its bf16 and int8
+    re-encodings, and int8 + the exact f32 rerank plane.  Recall is always
+    measured against the *f32* brute-force truth on the shared graph, so
+    the table reads directly as "what does each memory tier cost in
+    answer quality".  ``require_reduction`` (used by ``run.py --smoke``)
+    asserts the ISSUE-5 acceptance pair: int8 scan bytes/vector ≥ that
+    factor below f32 AND int8+rerank recall within 0.02 of f32.
+    """
+    rows = []
+    ug = common.ug_index(n)
+    qv, qi = common.queries("uniform", n=n)
+    gt = ug.ground_truth(qv, qi, sem=Semantics.IF, k=10)
+    variants = [
+        ("f32", ug),
+        ("bf16", ug.with_dtype("bf16")),
+        ("int8", ug.with_dtype("int8", rerank=False)),
+        ("int8_rerank", ug.with_dtype("int8", rerank=True)),
+    ]
+    recalls = {}
+    plane_b = {}
+    for tag, idx in variants:
+        dt, res = common.timed(
+            lambda idx=idx: idx.search(qv, qi, sem=Semantics.IF, ef=96, k=10))
+        r = recall(res, gt)
+        recalls[tag] = r
+        plane_b[tag] = idx.store.plane.bytes_per_vector()
+        rr = idx.store.rerank
+        rows.append(common.row(
+            f"memory_{tag}", 1e6 * dt / qv.shape[0],
+            f"recall={r:.3f} plane_bytes={plane_b[tag]:.0f} "
+            f"rerank_bytes={0 if rr is None else rr.bytes_per_vector():.0f} "
+            f"qps={qv.shape[0]/dt:.0f}"))
+    reduction = plane_b["f32"] / plane_b["int8_rerank"]
+    gap = recalls["f32"] - recalls["int8_rerank"]
+    rows.append(common.row(
+        "memory_summary", 0.0,
+        f"int8_scan_reduction={reduction:.2f} int8_rerank_recall_gap={gap:+.3f}"))
+    if require_reduction is not None:
+        assert reduction >= require_reduction, (
+            f"int8 scan plane only {reduction:.2f}x below f32 bytes/vector "
+            f"(need >= {require_reduction}x)")
+        assert gap <= 0.02, (
+            f"int8+rerank trails f32 recall by {gap:.3f} (allowed 0.02)")
+    return rows
+
+
 # ---------------------------------------------------------------- kernels
 def bench_kernels():
     """Pallas kernels (interpret mode on CPU — relative numbers only) vs jnp."""

@@ -153,28 +153,43 @@ def restore(
 # ------------------------------------------------------------------ indexes
 def save_index(ckpt_dir: str | pathlib.Path, step: int, index) -> pathlib.Path:
     """Checkpoint a (possibly mutated) UGIndex through the standard sharded
-    store: slot arrays become leaves under ``params/``, the build config and
-    allocator state ride in ``extra`` (DESIGN.md §11).  A streaming index's
-    ``alive``/``free`` masks are materialized so the restored index resumes
-    insert/delete exactly where the saved one stopped."""
+    store: the IndexStore's leaves become leaves under ``params/``, the
+    build config, plane tag and allocator state ride in ``extra``
+    (DESIGN.md §11/§12).  A streaming index's ``alive``/``free`` masks are
+    materialized so the restored index resumes insert/delete exactly where
+    the saved one stopped; quantization parameters round-trip bitwise (the
+    codes are meaningless under any other scale/zero)."""
+    st = index.store
+    x_save = st.plane.data
+    if st.plane.tag == "bf16":
+        # numpy writes ml_dtypes bfloat16 as raw void ('|V2') and cannot
+        # read it back: checkpoint the codes as a uint16 bit view (restore
+        # re-casts keyed on the saved dtype tag).
+        x_save = jnp.asarray(np.asarray(x_save).view(np.uint16))
     arrays = {
-        "x": index.x,
-        "intervals": index.intervals,
-        "nbrs": index.graph.nbrs,
-        "status": index.graph.status,
+        "x": x_save,
+        "intervals": st.intervals,
+        "nbrs": st.nbrs,
+        "status": st.status,
     }
-    streaming = index.alive is not None
+    if st.plane.scale is not None:
+        arrays["x_scale"] = st.plane.scale
+        arrays["x_zero"] = st.plane.zero
+    if st.rerank is not None:
+        arrays["rerank"] = st.rerank.data
+    streaming = st.alive is not None
     if streaming:
-        arrays["alive"] = index.alive
+        arrays["alive"] = st.alive
         arrays["free"] = (
-            jnp.zeros(index.alive.shape, bool) if index.free is None
-            else index.free
+            jnp.zeros(st.alive.shape, bool) if st.free is None else st.free
         )
     extra = {
         "kind": "ug_index",
         "config": dataclasses.asdict(index.config),
         "build_seconds": index.build_seconds,
         "streaming": streaming,
+        "dtype": st.plane.tag,
+        "has_rerank": st.rerank is not None,
     }
     return save(ckpt_dir, step, arrays, extra=extra)
 
@@ -188,8 +203,8 @@ def restore_index(ckpt_dir: str | pathlib.Path, step: int | None = None):
     (tests/test_updates_pipeline.py)."""
     from repro.core.build import UGConfig
     from repro.core.entry import build_entry_index
-    from repro.core.exact import DenseGraph
     from repro.core.index import UGIndex
+    from repro.core.store import IndexStore, VectorPlane
 
     root = pathlib.Path(ckpt_dir)
     if step is None:
@@ -201,8 +216,10 @@ def restore_index(ckpt_dir: str | pathlib.Path, step: int | None = None):
     if meta["extra"].get("kind") != "ug_index":
         raise ValueError(f"checkpoint at {src} is not a ug_index checkpoint")
 
+    keys = meta["keys"]
+
     def arr(key):
-        info = meta["keys"][f"params/{key}"]
+        info = keys[f"params/{key}"]
         return jnp.asarray(np.load(src / "arrays" / info["file"]))
 
     streaming = meta["extra"].get("streaming", False)
@@ -210,11 +227,26 @@ def restore_index(ckpt_dir: str | pathlib.Path, step: int | None = None):
     free = arr("free") if streaming else None
     intervals = arr("intervals")
     cfg = UGConfig(**meta["extra"]["config"])
-    return UGIndex(
-        arr("x"), intervals, DenseGraph(arr("nbrs"), arr("status")),
-        build_entry_index(intervals, node_mask=alive), cfg,
-        meta["extra"].get("build_seconds", 0.0), alive, free,
+    tag = meta["extra"].get("dtype", "f32")
+    x_arr = arr("x")
+    if tag == "bf16":  # stored as a uint16 bit view (see save_index)
+        x_arr = x_arr.view(jnp.bfloat16)
+    plane = VectorPlane(
+        tag, x_arr,
+        arr("x_scale") if "params/x_scale" in keys else None,
+        arr("x_zero") if "params/x_zero" in keys else None,
     )
+    rerank = (
+        VectorPlane("f32", arr("rerank"))
+        if meta["extra"].get("has_rerank", False) else None
+    )
+    store = IndexStore(
+        plane=plane, rerank=rerank, intervals=intervals,
+        nbrs=arr("nbrs"), status=arr("status"),
+        entry=build_entry_index(intervals, node_mask=alive),
+        alive=alive, free=free,
+    )
+    return UGIndex(store, cfg, meta["extra"].get("build_seconds", 0.0))
 
 
 class AsyncCheckpointer:

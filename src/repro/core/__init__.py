@@ -7,6 +7,7 @@ from repro.core.entry import (
     EntryIndex, build_entry_index, get_entry, get_entry_batch,
     get_entry_batch_flags, get_entry_flags,
 )
+from repro.core.store import IndexStore, VectorPlane, make_store
 from repro.core.index import UGIndex, recall
 from repro.core.search import (
     SearchResult, beam_search, beam_search_flags, brute_force, search,
@@ -22,6 +23,7 @@ __all__ = [
     "UGConfig", "build_ug", "DenseGraph", "build_exact",
     "greedy_monotonic_path", "EntryIndex", "build_entry_index", "get_entry",
     "get_entry_batch", "get_entry_batch_flags", "get_entry_flags",
+    "IndexStore", "VectorPlane", "make_store",
     "UGIndex", "recall", "SearchResult", "beam_search", "beam_search_flags",
     "brute_force", "search", "search_mixed",
     "compact", "delete_batch", "insert", "insert_batch", "repair_deleted",

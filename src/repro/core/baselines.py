@@ -28,6 +28,7 @@ from repro.core.build import UGConfig, build_ug
 from repro.core.entry import build_entry_index, get_entry
 from repro.core.exact import DenseGraph
 from repro.core.search import SearchResult, beam_search, brute_force
+from repro.core.store import make_store
 from repro.core.candidates import merge_topk
 
 
@@ -69,9 +70,12 @@ class PostFilterIndex:
         # default HNSW entry point).
         entry_ids = jnp.zeros((q_v.shape[0],), jnp.int32)
         kprime = min(max(k * oversample, ef), ef)
-        res = beam_search(
+        store = make_store(
             self.x, self.intervals, self.graph.nbrs, self.graph.status,
-            entry_ids, q_v, free_int,
+            build_entry=False,
+        )
+        res = beam_search(
+            store, entry_ids, q_v, free_int,
             sem=iv.Semantics.IF, ef=ef, k=kprime, max_steps=max_steps,
         )
         ok = iv.predicate(
@@ -193,9 +197,12 @@ class HiPNGLite:
             )
             entry = jnp.where(jnp.asarray(touches), 0, -1).astype(jnp.int32)
             kk = min(4 * k, max(part.node_ids.size, 1), ef)
-            res = beam_search(
+            store = make_store(
                 part.x, part.intervals, part.graph.nbrs, part.graph.status,
-                entry, q_v, free_int,
+                build_entry=False,
+            )
+            res = beam_search(
+                store, entry, q_v, free_int,
                 sem=iv.Semantics.IF, ef=ef, k=kk,
             )
             nloc = part.x.shape[0]

@@ -29,7 +29,7 @@ import numpy as np
 from repro.core.candidates import generate_candidates
 from repro.core.exact import DenseGraph
 from repro.core.prune import unified_prune
-from repro.kernels.util import pad_rows, pad_to
+from repro.kernels.util import pad_rows, pad_to, segment_scatter
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,20 +57,11 @@ class UGConfig:
 def scatter_repairs(
     w_ids: jnp.ndarray, v_ids: jnp.ndarray, n: int, width: int
 ) -> jnp.ndarray:
-    """Build fixed-width repair sets W(w) from flat (w, v) pairs (Alg. 2 l.11-12)."""
-    valid = (w_ids >= 0) & (v_ids >= 0)
-    seg = jnp.where(valid, w_ids, n)
-    order = jnp.argsort(seg, stable=True)
-    seg_s = seg[order]
-    v_s = v_ids[order]
-    first = jnp.searchsorted(seg_s, seg_s, side="left")
-    rank = jnp.arange(seg_s.shape[0]) - first
-    ok = (seg_s < n) & (rank < width)
-    out = jnp.full((n + 1, width), -1, jnp.int32)
-    out = out.at[jnp.where(ok, seg_s, n), jnp.where(ok, rank, 0)].set(
-        jnp.where(ok, v_s, -1), mode="drop"
-    )
-    return out[:n]
+    """Build fixed-width repair sets W(w) from flat (w, v) pairs (Alg. 2
+    l.11-12) — the shared sort-by-segment + rank scatter
+    (:func:`repro.kernels.util.segment_scatter`), kept under its Alg. 2
+    name at the build layer."""
+    return segment_scatter(w_ids, v_ids, n, width)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "keep", "backend"))
@@ -130,6 +121,37 @@ def _prune_all(
     )
 
 
+def refine_candidates(
+    x: jnp.ndarray,
+    intervals: jnp.ndarray,
+    cand: jnp.ndarray,
+    cfg: UGConfig,
+    backend: str | None = None,
+):
+    """The T-iteration Alg. 2 refinement over a prepared candidate pool:
+    fused pruning sweep + repair-set scatter per round.
+
+    Fully traceable (no host syncs, fixed ``keep`` width) — shared by
+    :func:`build_ug` and the on-device sharded build, which runs this exact
+    loop per shard under ``shard_map`` (core/sharded.py).  Returns
+    ``(nbrs, stat, deg_means)`` at full ``keep`` width (untrimmed).
+    """
+    n = x.shape[0]
+    repair = jnp.full((n, cfg.repair_width), -1, jnp.int32)
+    nbrs = stat = None
+    deg_means = []
+    for t in range(cfg.iterations):
+        pool = cand if t == 0 else jnp.concatenate([cand, repair], axis=1)
+        keep = min(cfg.max_edges_if + cfg.max_edges_is, pool.shape[1])
+        nbrs, stat, w_w, w_v = _prune_all(
+            x, intervals, pool, cfg, keep, backend
+        )
+        cand = nbrs  # retained neighbors seed the next round (Alg. 2 line 10)
+        repair = scatter_repairs(w_w, w_v, n, cfg.repair_width)
+        deg_means.append(jnp.mean(jnp.sum(nbrs >= 0, axis=1).astype(jnp.float32)))
+    return nbrs, stat, jnp.stack(deg_means)
+
+
 def build_ug(
     key: jax.Array,
     x: jnp.ndarray,
@@ -143,7 +165,6 @@ def build_ug(
     scalars and transfer to the host in a single sync after the last sweep
     (together with the trailing-column trim bound).
     """
-    n = x.shape[0]
     cand = generate_candidates(
         key, x, intervals,
         ef_spatial=cfg.ef_spatial, ef_attribute=cfg.ef_attribute,
@@ -152,22 +173,13 @@ def build_ug(
     if progress is not None:
         progress(f"candidates: shape {cand.shape}")
 
-    repair = jnp.full((n, cfg.repair_width), -1, jnp.int32)
-    nbrs = stat = None
-    deg_means = []
-    for t in range(cfg.iterations):
-        pool = cand if t == 0 else jnp.concatenate([cand, repair], axis=1)
-        keep = min(cfg.max_edges_if + cfg.max_edges_is, pool.shape[1])
-        nbrs, stat, w_w, w_v = _prune_all(
-            x, intervals, pool, cfg, keep, cfg.prune_backend
-        )
-        cand = nbrs  # retained neighbors seed the next round (Alg. 2 line 10)
-        repair = scatter_repairs(w_w, w_v, n, cfg.repair_width)
-        deg_means.append(jnp.mean(jnp.sum(nbrs >= 0, axis=1).astype(jnp.float32)))
+    nbrs, stat, deg_means = refine_candidates(
+        x, intervals, cand, cfg, cfg.prune_backend
+    )
 
     # Single device→host sync: per-iteration degree stats + trailing trim.
     live_cols = jnp.maximum(jnp.max(jnp.sum(nbrs >= 0, axis=1)), 1)
-    live_cols, deg_host = jax.device_get((live_cols, jnp.stack(deg_means)))
+    live_cols, deg_host = jax.device_get((live_cols, deg_means))
     if progress is not None:
         for t, dm in enumerate(np.asarray(deg_host)):
             progress(f"iter {t + 1}/{cfg.iterations}: mean degree {float(dm):.1f}")

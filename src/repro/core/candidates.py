@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.prune import squared_dist
-from repro.kernels.util import pad_rows, pad_to
+from repro.kernels.util import pad_rows, pad_to, segment_scatter
 
 
 class KnnState(NamedTuple):
@@ -85,23 +85,11 @@ def brute_force_knn(x: jnp.ndarray, k: int, block: int = 2048) -> KnnState:
 
 
 def _reverse_candidates(ids: jnp.ndarray, r_max: int) -> jnp.ndarray:
-    """Reverse edges via sort + segment rank: for each edge u→v, offer u to v."""
+    """Reverse edges: for each edge u→v, offer u to v — the shared
+    sort-by-segment + rank scatter (``kernels.util.segment_scatter``)."""
     n, k = ids.shape
     src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k)).reshape(-1)
-    dst = ids.reshape(-1)
-    valid = dst >= 0
-    seg = jnp.where(valid, dst, n)
-    order = jnp.argsort(seg, stable=True)
-    seg_s = seg[order]
-    src_s = src[order]
-    first = jnp.searchsorted(seg_s, seg_s, side="left")
-    rank = jnp.arange(seg_s.shape[0]) - first
-    ok = (seg_s < n) & (rank < r_max)
-    out = jnp.full((n + 1, r_max), -1, jnp.int32)
-    out = out.at[jnp.where(ok, seg_s, n), jnp.where(ok, rank, 0)].set(
-        jnp.where(ok, src_s, -1), mode="drop"
-    )
-    return out[:n]
+    return segment_scatter(ids.reshape(-1), src, n, r_max)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block"))

@@ -1,8 +1,16 @@
 """UGIndex — the user-facing unified interval-aware index (paper §4).
 
-One physical graph + per-edge semantic bitmask answers IFANN / ISANN / RFANN /
-RSANN queries (paper §2.1).  RF datasets store scalars as point intervals;
-RS queries pass point query intervals — both reductions are exact (§2.1).
+One physical graph + per-edge semantic bitmask answers IFANN / ISANN /
+RFANN / RSANN queries (paper §2.1).  RF datasets store scalars as point
+intervals; RS queries pass point query intervals — both reductions are
+exact (§2.1).
+
+Since DESIGN.md §12 the index is a thin host-side handle around one
+:class:`~repro.core.store.IndexStore` pytree — the store is what every
+layer (search, updates, serving, sharding, checkpointing) shares, and it
+is held *by reference* everywhere (attaching an index to a ServeEngine
+copies nothing).  The legacy array views (``x``/``intervals``/``graph``/
+``entry``/``alive``/``free``) are properties over the store's buffers.
 """
 from __future__ import annotations
 
@@ -17,31 +25,62 @@ import numpy as np
 
 from repro.core import intervals as iv
 from repro.core.build import UGConfig, build_ug
-from repro.core.entry import EntryIndex, build_entry_index, get_entry
+from repro.core.entry import EntryIndex, build_entry_index
 from repro.core.exact import DenseGraph
-from repro.core.search import SearchResult, beam_search, brute_force
+from repro.core.search import SearchResult, brute_force
 from repro.core.search import search as core_search
 from repro.core.search import search_mixed as core_search_mixed
+from repro.core.store import IndexStore, VectorPlane, make_store
 
 
 @dataclasses.dataclass
 class UGIndex:
-    """Unified graph index: corpus, intervals, graph, entry structure.
+    """Unified graph index: one :class:`IndexStore` + build config.
 
-    Arrays are sized to ``capacity`` slots; ``alive`` marks the live nodes
-    and ``free`` the slots the streaming allocator may hand out again
+    Store arrays are sized to ``capacity`` slots; ``alive`` marks the live
+    nodes and ``free`` the slots the streaming allocator may hand out again
     (DESIGN.md §11).  A freshly built or loaded static index leaves both
     ``None`` (all slots live, none free) and pays zero masking cost.
     """
 
-    x: jnp.ndarray            # (cap, d)
-    intervals: jnp.ndarray    # (cap, 2)
-    graph: DenseGraph
-    entry: EntryIndex
+    store: IndexStore
     config: UGConfig
     build_seconds: float = 0.0
-    alive: jnp.ndarray | None = None   # (cap,) bool; None = all live
-    free: jnp.ndarray | None = None    # (cap,) bool; None = none free
+
+    # --------------------------------------------------------- store views
+    @property
+    def x(self) -> jnp.ndarray:
+        """f32 view of the vectors: the exact rerank plane when present,
+        else the decoded scan plane (identity — same buffer — for f32)."""
+        return self.store.vectors_f32()
+
+    @property
+    def intervals(self) -> jnp.ndarray:
+        return self.store.intervals
+
+    @property
+    def graph(self) -> DenseGraph:
+        return self.store.graph
+
+    @property
+    def entry(self) -> EntryIndex:
+        return self.store.entry
+
+    @property
+    def alive(self) -> jnp.ndarray | None:
+        return self.store.alive
+
+    @property
+    def free(self) -> jnp.ndarray | None:
+        return self.store.free
+
+    @property
+    def dtype(self) -> str:
+        """Scan-plane tag: ``f32`` | ``bf16`` | ``int8``."""
+        return self.store.plane.tag
+
+    def with_store(self, store: IndexStore) -> "UGIndex":
+        return dataclasses.replace(self, store=store)
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -52,15 +91,41 @@ class UGIndex:
         config: UGConfig = UGConfig(),
         seed: int = 0,
         progress=None,
+        *,
+        dtype: str = "f32",
+        rerank: bool | None = None,
     ) -> "UGIndex":
+        """Alg. 1–3 build + plane encoding.
+
+        The graph is always constructed from the f32 vectors; ``dtype``
+        selects the *scan plane* the serving path scores against, and
+        ``rerank`` attaches the exact f32 plane for final-top-k re-scoring
+        (default: on for ``int8``, off otherwise)."""
         x = jnp.asarray(x)
         intervals = jnp.asarray(intervals)
         t0 = time.perf_counter()
         graph = build_ug(jax.random.key(seed), x, intervals, config, progress)
-        eidx = build_entry_index(intervals)
         jax.block_until_ready(graph.nbrs)
         dt = time.perf_counter() - t0
-        return cls(x, intervals, graph, eidx, config, dt)
+        if rerank is None:
+            rerank = dtype == "int8"
+        store = make_store(
+            x, intervals, graph.nbrs, graph.status, dtype=dtype, rerank=rerank,
+        )
+        return cls(store, config, dt)
+
+    def with_dtype(self, dtype: str, *, rerank: bool | None = None) -> "UGIndex":
+        """Re-encode the vector planes (same graph, same ids): the
+        cross-dtype parity harness — search quality of a ``bf16``/``int8``
+        plane is measured against the f32 plane *on the identical graph*."""
+        if rerank is None:
+            rerank = dtype == "int8"
+        x = self.store.vectors_f32()
+        store = self.store.replace(
+            plane=VectorPlane.encode(x, dtype),
+            rerank=VectorPlane.encode(x, "f32") if rerank else None,
+        )
+        return self.with_store(store)
 
     # ----------------------------------------------------------------- search
     def search(
@@ -78,10 +143,9 @@ class UGIndex:
         """Alg. 5 + Alg. 4.  ``backend``/``width`` select the search pipeline
         (fused multi-expansion by default; see core/search.py)."""
         return core_search(
-            self.x, self.intervals, self.graph.nbrs, self.graph.status,
-            self.entry, jnp.asarray(q_v), jnp.asarray(q_int),
+            self.store, jnp.asarray(q_v), jnp.asarray(q_int),
             sem=sem, ef=ef, k=k, max_steps=max_steps,
-            backend=backend, width=width, alive=self.alive,
+            backend=backend, width=width,
         )
 
     def search_mixed(
@@ -101,15 +165,16 @@ class UGIndex:
         traffic (DESIGN.md §10).  ``sem_flags`` accepts a per-query sequence
         of :class:`Semantics`, a flag array, or a single ``Semantics``."""
         return core_search_mixed(
-            self.x, self.intervals, self.graph.nbrs, self.graph.status,
-            self.entry, jnp.asarray(q_v), jnp.asarray(q_int), sem_flags,
+            self.store, jnp.asarray(q_v), jnp.asarray(q_int), sem_flags,
             ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
-            alive=self.alive,
         )
 
     def ground_truth(self, q_v, q_int, *, sem: iv.Semantics, k: int) -> SearchResult:
+        """Exact predicate-filtered top-k over the best-precision vectors
+        (the rerank plane when present, else the decoded scan plane)."""
         return brute_force(
-            self.x, self.intervals, jnp.asarray(q_v), jnp.asarray(q_int),
+            self.store.vectors_f32(), self.intervals,
+            jnp.asarray(q_v), jnp.asarray(q_int),
             sem=sem, k=k, alive=self.alive,
         )
 
@@ -136,24 +201,29 @@ class UGIndex:
     @property
     def capacity(self) -> int:
         """Allocated slots (live + tombstoned + free)."""
-        return self.x.shape[0]
+        return self.store.capacity
 
     @property
     def n(self) -> int:
         """Live node count (== capacity for a static index)."""
         if self.alive is None:
-            return self.x.shape[0]
+            return self.store.capacity
         return int(jnp.sum(self.alive))
 
     def memory_bytes(self) -> int:
-        g = self.graph
-        masks = 0 if self.alive is None else 2 * self.x.shape[0]
-        return int(
-            g.nbrs.size * g.nbrs.dtype.itemsize
-            + g.status.size * g.status.dtype.itemsize
-            + self.entry.l_sorted.size * 4 * 6
-            + masks
-        )
+        """Graph + entry + allocator bytes (the index *overhead* the paper's
+        memory tables report; vector planes via :meth:`vector_memory_bytes`)."""
+        m = self.store.memory_bytes()
+        return int(m["graph"] + m["entry"] + m["masks"])
+
+    def vector_memory_bytes(self) -> dict:
+        """Per-plane vector bytes (scan plane, rerank plane, per-vector)."""
+        m = self.store.memory_bytes()
+        return {
+            "plane": m["plane"],
+            "rerank": m["rerank"],
+            "plane_bytes_per_vector": self.store.plane.bytes_per_vector(),
+        }
 
     def degree_stats(self) -> dict:
         g = self.graph
@@ -175,21 +245,34 @@ class UGIndex:
     def save(self, path: str | pathlib.Path) -> None:
         path = pathlib.Path(path)
         path.mkdir(parents=True, exist_ok=True)
+        st = self.store
+        x_np = np.asarray(st.plane.data)
+        if st.plane.tag == "bf16":
+            # numpy serializes ml_dtypes bfloat16 as raw void ('|V2') and
+            # cannot read it back: store the codes as a uint16 bit view
+            # (load re-casts keyed on the saved dtype tag).
+            x_np = x_np.view(np.uint16)
         arrays = dict(
-            x=np.asarray(self.x),
-            intervals=np.asarray(self.intervals),
-            nbrs=np.asarray(self.graph.nbrs),
-            status=np.asarray(self.graph.status),
+            x=x_np,
+            intervals=np.asarray(st.intervals),
+            nbrs=np.asarray(st.nbrs),
+            status=np.asarray(st.status),
         )
-        if self.alive is not None:
-            arrays["alive"] = np.asarray(self.alive)
+        if st.plane.scale is not None:
+            arrays["x_scale"] = np.asarray(st.plane.scale)
+            arrays["x_zero"] = np.asarray(st.plane.zero)
+        if st.rerank is not None:
+            arrays["rerank"] = np.asarray(st.rerank.data)
+        if st.alive is not None:
+            arrays["alive"] = np.asarray(st.alive)
             arrays["free"] = (
-                np.zeros(arrays["alive"].shape, bool) if self.free is None
-                else np.asarray(self.free)
+                np.zeros(arrays["alive"].shape, bool) if st.free is None
+                else np.asarray(st.free)
             )
         np.savez_compressed(path / "index.npz", **arrays)
         meta = dataclasses.asdict(self.config)
         meta["build_seconds"] = self.build_seconds
+        meta["dtype"] = st.plane.tag
         (path / "meta.json").write_text(json.dumps(meta, indent=2))
 
     @classmethod
@@ -198,14 +281,30 @@ class UGIndex:
         blob = np.load(path / "index.npz")
         meta = json.loads((path / "meta.json").read_text())
         build_seconds = meta.pop("build_seconds", 0.0)
+        tag = meta.pop("dtype", "f32")
         cfg = UGConfig(**meta)
-        x = jnp.asarray(blob["x"])
         intervals = jnp.asarray(blob["intervals"])
-        graph = DenseGraph(jnp.asarray(blob["nbrs"]), jnp.asarray(blob["status"]))
         alive = jnp.asarray(blob["alive"]) if "alive" in blob.files else None
         free = jnp.asarray(blob["free"]) if "free" in blob.files else None
-        entry = build_entry_index(intervals, node_mask=alive)
-        return cls(x, intervals, graph, entry, cfg, build_seconds, alive, free)
+        x_np = blob["x"]
+        if tag == "bf16":  # stored as a uint16 bit view (see save)
+            x_np = jnp.asarray(x_np).view(jnp.bfloat16)
+        plane = VectorPlane(
+            tag, jnp.asarray(x_np),
+            jnp.asarray(blob["x_scale"]) if "x_scale" in blob.files else None,
+            jnp.asarray(blob["x_zero"]) if "x_zero" in blob.files else None,
+        )
+        rerank = (
+            VectorPlane("f32", jnp.asarray(blob["rerank"]))
+            if "rerank" in blob.files else None
+        )
+        store = IndexStore(
+            plane=plane, rerank=rerank, intervals=intervals,
+            nbrs=jnp.asarray(blob["nbrs"]), status=jnp.asarray(blob["status"]),
+            entry=build_entry_index(intervals, node_mask=alive),
+            alive=alive, free=free,
+        )
+        return cls(store, cfg, build_seconds)
 
 
 def recall(result: SearchResult, truth: SearchResult) -> float:

@@ -34,6 +34,15 @@ live nodes — deleting a node must not disconnect the monotone paths that
 run through it — but they are filtered at result extraction, so they can
 *route* and never *surface*.  ``alive=None`` (static index) skips the
 masking entirely and is bit-identical to the pre-tombstone pipeline.
+
+IndexStore (DESIGN.md §12): the public entry points take one
+:class:`repro.core.store.IndexStore` pytree instead of hand-carried
+``(x, intervals, nbrs, status, alive)`` tuples.  Scoring dispatches on the
+store's vector-plane tag (``ops.expand_score_plane``): ``f32``/``bf16``
+run the existing kernels (rows cast in-register), ``int8`` the quantized
+dequant-in-register twins.  When the store carries a rerank plane, the
+final beam is re-scored against the exact f32 vectors before top-k
+extraction, so a quantized scan plane keeps f32-grade answers.
 """
 from __future__ import annotations
 
@@ -44,11 +53,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import intervals as iv
-from repro.core.entry import (
-    EntryIndex,
-    get_entry_batch_flags,
-    get_entry_flags,
-)
+from repro.core.entry import get_entry_batch_flags, get_entry_flags
 from repro.kernels import ops
 from repro.kernels.beam_merge import PAD_PAYLOAD, next_pow2
 from repro.kernels.expand_score import dedup_first, dedup_first_quadratic
@@ -92,21 +97,21 @@ def _search_one(
     q_int: jnp.ndarray,      # (2,)
     start: jnp.ndarray,      # () int32, -1 = no valid entry
     sem_flag: jnp.ndarray,   # () int32 FLAG_IF | FLAG_IS (runtime semantics)
-    x: jnp.ndarray,          # (n, d)
+    plane,                   # VectorPlane — the (n, d) scoring plane
     intervals: jnp.ndarray,  # (n, 2)
     nbrs: jnp.ndarray,       # (n, M)
     status: jnp.ndarray,     # (n, M) uint8
     ef: int,
     max_steps: int,
 ):
-    n, d = x.shape
+    n, d = plane.data.shape
     M = nbrs.shape[1]
     nwords = (n + 31) // 32
 
     q32 = q_v.astype(jnp.float32)
 
     def dist_to(ids):
-        xs = x[jnp.clip(ids, 0, n - 1)].astype(jnp.float32)
+        xs = plane.decode_rows(jnp.clip(ids, 0, n - 1)).astype(jnp.float32)
         diff = xs - q32[None, :]
         return jnp.sum(diff * diff, axis=-1)
 
@@ -175,7 +180,7 @@ def _search_one(
 
 
 def _make_fused_step(
-    x: jnp.ndarray,          # (n, d)
+    plane,                   # VectorPlane — the (n, d) scoring plane
     intervals: jnp.ndarray,  # (n, 2)
     nbrs: jnp.ndarray,       # (n, M)
     status: jnp.ndarray,     # (n, M) uint8
@@ -195,7 +200,7 @@ def _make_fused_step(
     ``(B, C, d)`` gather + matmul and the ``O(C²)`` pairwise dedup — kept
     only as the A/B baseline for that profile.
     """
-    n, d = x.shape
+    n, d = plane.data.shape
     M = nbrs.shape[1]
     B = q32.shape[0]
     C = W * M
@@ -210,9 +215,9 @@ def _make_fused_step(
 
     def score(ids_c, valid):
         """Squared distances of the masked candidate ids via the
-        expand-score kernel (+inf where invalid)."""
-        return ops.expand_score(
-            x, jnp.where(valid, ids_c, -1), q32, backend=backend
+        expand-score kernel on the store's plane (+inf where invalid)."""
+        return ops.expand_score_plane(
+            plane, jnp.where(valid, ids_c, -1), q32, backend=backend
         )
 
     def predicate(obj_int):
@@ -260,7 +265,8 @@ def _make_fused_step(
 
 
 def _beam_search_fused(
-    x: jnp.ndarray,          # (n, d)
+    plane,                   # VectorPlane — (n, d) scoring plane
+    rerank,                  # VectorPlane | None — exact f32 re-scoring plane
     intervals: jnp.ndarray,  # (n, 2)
     nbrs: jnp.ndarray,       # (n, M)
     status: jnp.ndarray,     # (n, M) uint8
@@ -287,8 +293,12 @@ def _beam_search_fused(
     row-independently, each row's result is bitwise independent of the rest
     of the batch, which is what makes mixed-semantics batches return exactly
     the per-semantics answers (DESIGN.md §10).
+
+    With a rerank plane the (possibly quantized) scan distances steer the
+    traversal only; the surviving beam is re-scored against the exact f32
+    plane — ``E`` row fetches per query, once — before top-k extraction.
     """
-    n, d = x.shape
+    n, d = plane.data.shape
     B = q_v.shape[0]
     W = max(min(width, ef), 1)
     E = next_pow2(ef)
@@ -296,7 +306,7 @@ def _beam_search_fused(
 
     q32 = q_v.astype(jnp.float32)
     step, score, merge = _make_fused_step(
-        x, intervals, nbrs, status, q32, q_int, sem_flags,
+        plane, intervals, nbrs, status, q32, q_int, sem_flags,
         W=W, backend=backend,
     )
 
@@ -327,6 +337,23 @@ def _beam_search_fused(
     state = (beam_d, beam_p, visited, jnp.zeros((B,), jnp.int32), jnp.int32(0))
     beam_d, beam_p, visited, steps, it = jax.lax.while_loop(cond, body, state)
 
+    if rerank is not None:
+        # Re-score the surviving beam against the exact f32 plane (one row
+        # fetch per beam slot); the re-scored beam is no longer sorted, so
+        # extraction always goes through the masked top-k.
+        all_ids = beam_p >> 1
+        ok = jnp.isfinite(beam_d)
+        beam_d = ops.expand_score(
+            rerank.data, jnp.where(ok, all_ids, -1), q32, backend=backend
+        )
+        if alive is not None:
+            ok = ok & alive[jnp.clip(all_ids, 0, n - 1)]
+        neg, sel = jax.lax.top_k(-jnp.where(ok, beam_d, jnp.inf), k)
+        dist = -neg
+        ids = jnp.where(
+            jnp.isfinite(dist), jnp.take_along_axis(all_ids, sel, axis=-1), -1
+        )
+        return SearchResult(ids, dist, steps, it)
     if alive is None:
         dist = beam_d[:, :k]                               # beam is sorted
         ids = jnp.where(jnp.isfinite(dist), beam_p[:, :k] >> 1, -1)
@@ -348,16 +375,17 @@ def _beam_search_fused(
 @functools.partial(
     jax.jit, static_argnames=("ef", "k", "max_steps", "backend", "width")
 )
-def beam_search_flags(
-    x: jnp.ndarray,
+def _beam_search_flags_impl(
+    plane,                    # VectorPlane scoring plane
+    rerank,                   # VectorPlane | None exact f32 plane
     intervals: jnp.ndarray,
     nbrs: jnp.ndarray,
     status: jnp.ndarray,
+    alive: jnp.ndarray | None,
     entry_ids: jnp.ndarray,   # (B,) or (B, We) int32 entry node(s) (Alg. 5)
     q_v: jnp.ndarray,         # (B, d)
     q_int: jnp.ndarray,       # (B, 2)
     sem_flags: jnp.ndarray,   # (B,) int32 runtime semantics (FLAG_IF/FLAG_IS)
-    alive: jnp.ndarray | None = None,  # (n,) bool tombstone mask
     *,
     ef: int,
     k: int,
@@ -365,36 +393,32 @@ def beam_search_flags(
     backend: str | None = None,
     width: int = 4,
 ) -> SearchResult:
-    """Batched Alg. 4 with *runtime* per-query semantics (DESIGN.md §10).
-
-    ``sem_flags`` is a traced ``(B,)`` array — not a static argname — so one
-    compiled program serves a mixed IF/IS/RF/RS batch; ``max_steps=0``
-    derives a generous default (8·ef+32).  ``backend`` selects the hot-loop
-    implementation: ``"pallas"`` / ``"xla"`` are the fused multi-expansion
-    pipeline (bit-identical to each other; default — pallas on TPU, xla on
-    CPU), ``"legacy"`` the original one-node-per-step argsort loop.
-    ``width`` is the fused frontier width W.  ``alive`` is the tombstone
-    mask (DESIGN.md §11): dead nodes route but never surface.
-    """
     steps_cap = max_steps if max_steps > 0 else 8 * ef + 32
     sem_flags = sem_flags.astype(jnp.int32)
     if backend != "legacy":
         backend = ops.resolve_backend(backend)
         ent = entry_ids[:, None] if entry_ids.ndim == 1 else entry_ids
         return _beam_search_fused(
-            x, intervals, nbrs, status, ent, q_v, q_int, sem_flags, alive,
+            plane, rerank, intervals, nbrs, status, ent, q_v, q_int,
+            sem_flags, alive,
             ef=ef, k=k, max_steps=steps_cap, width=width, backend=backend,
         )
     entry_one = entry_ids if entry_ids.ndim == 1 else entry_ids[:, 0]
     run = jax.vmap(
         lambda qv, qi, s, f: _search_one(
-            qv, qi, s, f, x, intervals, nbrs, status,
+            qv, qi, s, f, plane, intervals, nbrs, status,
             ef=ef, max_steps=steps_cap,
         )
     )
     beam_ids, beam_d, steps = run(q_v, q_int, entry_one, sem_flags)
+    n = plane.data.shape[0]
+    if rerank is not None:  # exact-plane re-scoring of the surviving beam
+        ok = jnp.isfinite(beam_d) & (beam_ids >= 0)
+        beam_d = ops.expand_score(
+            rerank.data, jnp.where(ok, beam_ids, -1),
+            q_v.astype(jnp.float32), backend=None,
+        )
     if alive is not None:  # tombstoned beam entries never surface
-        n = x.shape[0]
         beam_d = jnp.where(
             (beam_ids >= 0) & alive[jnp.clip(beam_ids, 0, n - 1)],
             beam_d, jnp.inf,
@@ -408,11 +432,43 @@ def beam_search_flags(
     return SearchResult(ids, dist, steps, jnp.max(steps))
 
 
+def beam_search_flags(
+    store,
+    entry_ids: jnp.ndarray,   # (B,) or (B, We) int32 entry node(s) (Alg. 5)
+    q_v: jnp.ndarray,         # (B, d)
+    q_int: jnp.ndarray,       # (B, 2)
+    sem_flags: jnp.ndarray,   # (B,) int32 runtime semantics (FLAG_IF/FLAG_IS)
+    *,
+    ef: int,
+    k: int,
+    max_steps: int = 0,
+    backend: str | None = None,
+    width: int = 4,
+) -> SearchResult:
+    """Batched Alg. 4 with *runtime* per-query semantics (DESIGN.md §10)
+    over an :class:`~repro.core.store.IndexStore`.
+
+    ``sem_flags`` is a traced ``(B,)`` array — not a static argname — so one
+    compiled program serves a mixed IF/IS/RF/RS batch; ``max_steps=0``
+    derives a generous default (8·ef+32).  ``backend`` selects the hot-loop
+    implementation: ``"pallas"`` / ``"xla"`` are the fused multi-expansion
+    pipeline (bit-identical to each other; default — pallas on TPU, xla on
+    CPU), ``"legacy"`` the original one-node-per-step argsort loop.
+    ``width`` is the fused frontier width W.  The store's ``alive`` mask is
+    the tombstone mask (DESIGN.md §11): dead nodes route but never surface;
+    its plane tag picks the scoring kernel and its rerank plane (when
+    present) re-scores the final beam (DESIGN.md §12).  The store's entry
+    structure is *not* consulted — entry ids come from the caller.
+    """
+    return _beam_search_flags_impl(
+        store.plane, store.rerank, store.intervals, store.nbrs, store.status,
+        store.alive, entry_ids, q_v, q_int, sem_flags,
+        ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
+    )
+
+
 def beam_search(
-    x: jnp.ndarray,
-    intervals: jnp.ndarray,
-    nbrs: jnp.ndarray,
-    status: jnp.ndarray,
+    store,
     entry_ids: jnp.ndarray,
     q_v: jnp.ndarray,
     q_int: jnp.ndarray,
@@ -423,23 +479,17 @@ def beam_search(
     max_steps: int = 0,
     backend: str | None = None,
     width: int = 4,
-    alive: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Single-semantics Alg. 4: a thin wrapper that broadcasts ``sem`` to a
     flag array and runs the same compiled program as the mixed path."""
     return beam_search_flags(
-        x, intervals, nbrs, status, entry_ids, q_v, q_int,
-        iv.as_sem_flags(sem, q_v.shape[0]), alive,
+        store, entry_ids, q_v, q_int, iv.as_sem_flags(sem, q_v.shape[0]),
         ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
     )
 
 
 def search_mixed(
-    x: jnp.ndarray,
-    intervals: jnp.ndarray,
-    nbrs: jnp.ndarray,
-    status: jnp.ndarray,
-    eidx: EntryIndex,
+    store,
     q_v: jnp.ndarray,
     q_int: jnp.ndarray,
     sem_flags,
@@ -449,34 +499,34 @@ def search_mixed(
     max_steps: int = 0,
     backend: str | None = None,
     width: int = 4,
-    alive: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Entry acquisition (Alg. 5) + beam search (Alg. 4) for a batch whose
     queries each carry their own semantics (DESIGN.md §10).
 
     ``sem_flags`` accepts anything :func:`intervals.as_sem_flags` does: one
     :class:`Semantics`, a per-query sequence, or a ``(B,)`` flag array.
-    ``alive`` is the tombstone mask; the caller is responsible for passing
-    an entry structure built with the matching ``node_mask`` so Alg. 5
-    never certifies a dead node (see UGIndex.delete).
+    The store must carry an entry structure built with a ``node_mask``
+    matching its ``alive`` mask so Alg. 5 never certifies a dead node
+    (UGIndex.delete maintains that invariant).
     """
+    eidx = store.entry
+    if eidx is None:
+        raise ValueError(
+            "store has no entry structure; build one (make_store/"
+            "build_entry_index) or pass entry ids to beam_search_flags")
     flags = iv.as_sem_flags(sem_flags, q_v.shape[0])
     if backend == "legacy":
         entry_ids = get_entry_flags(eidx, q_int, flags)
     else:
         entry_ids = get_entry_batch_flags(eidx, q_int, flags, width=width)
     return beam_search_flags(
-        x, intervals, nbrs, status, entry_ids, q_v, q_int, flags, alive,
+        store, entry_ids, q_v, q_int, flags,
         ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
     )
 
 
 def search(
-    x: jnp.ndarray,
-    intervals: jnp.ndarray,
-    nbrs: jnp.ndarray,
-    status: jnp.ndarray,
-    eidx: EntryIndex,
+    store,
     q_v: jnp.ndarray,
     q_int: jnp.ndarray,
     *,
@@ -486,7 +536,6 @@ def search(
     max_steps: int = 0,
     backend: str | None = None,
     width: int = 4,
-    alive: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Entry acquisition (Alg. 5) + interval-aware beam search (Alg. 4).
 
@@ -494,9 +543,8 @@ def search(
     (widened Alg. 5) so the very first step already expands ``W`` nodes.
     """
     return search_mixed(
-        x, intervals, nbrs, status, eidx, q_v, q_int, sem,
+        store, q_v, q_int, sem,
         ef=ef, k=k, max_steps=max_steps, backend=backend, width=width,
-        alive=alive,
     )
 
 
@@ -510,6 +558,7 @@ def search_step_memory_profile(
     M: int = 16,
     width: int = 4,
     ef: int = 32,
+    dtype: str = "f32",
 ) -> dict:
     """Trace one fused search step and report its intermediate profile.
 
@@ -517,8 +566,11 @@ def search_step_memory_profile(
     ``(B, C, d)`` candidate gather or ``(·, C, C)`` dedup tensor is
     materialized.  The new path (``xla``/``pallas``) must show neither; the
     ``legacy`` expand/dedup baseline shows both (the ISSUE-3 acceptance
-    check, mirroring PR 2's ``sweep_memory_profile``).
+    check, mirroring PR 2's ``sweep_memory_profile``).  ``dtype`` selects
+    the vector plane: the quantized kernels carry the identical guarantee
+    (DESIGN.md §12), which this profile certifies for ``int8`` too.
     """
+    from repro.core.store import VectorPlane
     from repro.kernels.prune_sweep import _iter_eqn_avals
 
     C = max(min(width, ef), 1) * M
@@ -526,16 +578,24 @@ def search_step_memory_profile(
     nwords = (n + 31) // 32
     f32, i32 = jnp.float32, jnp.int32
 
-    def one_step(x, intervals, nbrs, status, q_v, q_int, sem_flags,
+    def one_step(plane, intervals, nbrs, status, q_v, q_int, sem_flags,
                  beam_d, beam_p, visited, steps):
         step, _, _ = _make_fused_step(
-            x, intervals, nbrs, status, q_v.astype(f32), q_int, sem_flags,
+            plane, intervals, nbrs, status, q_v.astype(f32), q_int, sem_flags,
             W=max(min(width, ef), 1), backend=backend,
         )
         return step(beam_d, beam_p, visited, steps)
 
+    if dtype == "int8":
+        plane_sds = VectorPlane(
+            "int8", jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((d,), f32), jax.ShapeDtypeStruct((d,), f32),
+        )
+    else:
+        plane_dt = {"f32": jnp.float32, "bf16": jnp.bfloat16}[dtype]
+        plane_sds = VectorPlane(dtype, jax.ShapeDtypeStruct((n, d), plane_dt))
     args = (
-        jax.ShapeDtypeStruct((n, d), f32),
+        plane_sds,
         jax.ShapeDtypeStruct((n, 2), f32),
         jax.ShapeDtypeStruct((n, M), i32),
         jax.ShapeDtypeStruct((n, M), jnp.uint8),

@@ -6,6 +6,12 @@ each shard's sub-index is a valid unified graph over its rows, so shard-local
 beam search + a global top-k merge is a correct (and embarrassingly parallel)
 decomposition of the query.
 
+Since DESIGN.md §12 the sharded index is the *same* :class:`IndexStore`
+pytree the single-host path serves — leaves row-sharded over the index
+axes, quantization parameters replicated — wrapped with the shard-local →
+global id map in :class:`ShardedIndex`.  There is no separate sharded
+representation anymore.
+
 Collective schedule (see DESIGN.md §4 and EXPERIMENTS.md §Perf):
 
 * baseline merge — one ``all_gather`` of per-shard top-k over every index
@@ -14,15 +20,18 @@ Collective schedule (see DESIGN.md §4 and EXPERIMENTS.md §Perf):
   the (slow, cross-pod) axis moves only ``k`` survivors per pod instead of
   ``k`` per chip: cross-pod bytes drop by the pod size (16×).
 
-Also here: the ring-streamed exact KNN builder used to bootstrap candidate
-sets when the corpus is too large for any single host (each shard's rows
-visit every other shard once via ``ppermute`` — compute/comm overlapped by
-construction since each ring step's matmul hides the next permute).
+Construction (DESIGN.md §12): :func:`build_sharded_store` builds every
+shard's graph **on device** in one jitted ``shard_map`` program — the
+ring-KNN bootstrap (``ppermute`` pipeline, masked to own-shard rows)
+replaces per-shard NN-descent, shard-local attribute sort orders supply
+the Alg. 1 interval candidates, and the same jitted ``_prune_all`` /
+repair iterations the single-host build runs (``build.refine_candidates``)
+refine each shard — no per-shard host ``build_ug`` calls, no round-robin
+numpy padding loop.  :func:`build_sharded_index_host` remains as the
+serial host reference the parity tests compare against.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import NamedTuple, Sequence
 
 import jax
@@ -31,23 +40,54 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import intervals as iv
-from repro.core.candidates import merge_topk
+from repro.core.build import refine_candidates
+from repro.core.candidates import attribute_candidates, merge_topk
 from repro.core.entry import build_entry_index, get_entry_batch_flags, get_entry_flags
+from repro.core.prune import squared_dist
 from repro.core.search import beam_search_flags
+from repro.core.store import IndexStore, VectorPlane, quantization_params
 
 from repro import compat
 from repro.compat import shard_map
 
 
-class ShardedIndexArrays(NamedTuple):
-    """Device arrays of a row-sharded index (all sharded along axis 0 over the
-    index axes, except queries which are replicated)."""
+class ShardedIndex(NamedTuple):
+    """A row-sharded :class:`IndexStore` + the shard-local → global id map.
 
-    x: jnp.ndarray          # (n, d) rows sharded
-    intervals: jnp.ndarray  # (n, 2) rows sharded
-    nbrs: jnp.ndarray       # (n, M) shard-LOCAL neighbor ids
-    status: jnp.ndarray     # (n, M)
-    global_ids: jnp.ndarray # (n,) shard-local row -> global id
+    ``store`` carries ``entry=None`` (each shard builds its entry structure
+    over its own rows inside ``shard_map``) and ``alive=None`` (liveness is
+    ``global_ids >= 0`` — a pad or shard-level tombstone flips the gid).
+    """
+
+    store: IndexStore
+    global_ids: jnp.ndarray  # (n,) shard-local row -> global id, -1 = pad
+
+
+def _plane_like(plane, row, rep):
+    """A VectorPlane-shaped pytree with per-leaf values (specs/shardings)."""
+    if plane is None:
+        return None
+    return VectorPlane(
+        plane.tag, row,
+        None if plane.scale is None else rep,
+        None if plane.zero is None else rep,
+    )
+
+
+def store_pspecs(store: IndexStore, index_axes: Sequence[str]):
+    """PartitionSpec pytree of a row-sharded store: capacity-leading arrays
+    over ``index_axes``, quantization parameters replicated."""
+    row = P(tuple(index_axes))
+    rep = P()
+    none_or_row = lambda a: None if a is None else row
+    return IndexStore(
+        plane=_plane_like(store.plane, row, rep),
+        rerank=_plane_like(store.rerank, row, rep),
+        intervals=row, nbrs=row, status=row,
+        entry=None if store.entry is None else jax.tree.map(
+            lambda _: row, store.entry),
+        alive=none_or_row(store.alive), free=none_or_row(store.free),
+    )
 
 
 def shard_index(
@@ -58,13 +98,39 @@ def shard_index(
     nbrs: np.ndarray,
     status: np.ndarray,
     global_ids: np.ndarray,
-) -> ShardedIndexArrays:
-    """Place host arrays onto the mesh, rows sharded over ``index_axes``."""
-    row = P(tuple(index_axes))
-    put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))
-    return ShardedIndexArrays(
-        put(x, row), put(intervals, row), put(nbrs, row),
-        put(status, row), put(global_ids, row),
+    *,
+    dtype: str = "f32",
+    rerank: bool = False,
+    qparams=None,
+) -> ShardedIndex:
+    """Assemble host arrays into a row-sharded :class:`ShardedIndex`.
+
+    ``dtype``/``rerank`` encode the vector planes exactly as the single-host
+    store does (core/store.py); quantization parameters are derived over
+    the *real* rows only (``global_ids >= 0`` — the host builder's zero
+    pad rows would otherwise widen the per-dim ranges and inflate the
+    quantization error), or passed via ``qparams``, and replicated.
+    """
+    x = jnp.asarray(x)
+    if dtype == "int8" and qparams is None:
+        real = np.asarray(global_ids) >= 0
+        qparams = quantization_params(x[jnp.asarray(real)])
+    store = IndexStore(
+        plane=VectorPlane.encode(x, dtype, qparams),
+        rerank=VectorPlane.encode(x, "f32") if rerank else None,
+        intervals=jnp.asarray(intervals),
+        nbrs=jnp.asarray(nbrs),
+        status=jnp.asarray(status),
+        entry=None,
+    )
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), store_pspecs(store, index_axes),
+        is_leaf=lambda v: isinstance(v, P),
+    )
+    row = NamedSharding(mesh, P(tuple(index_axes)))
+    return ShardedIndex(
+        jax.device_put(store, shardings),
+        jax.device_put(jnp.asarray(global_ids), row),
     )
 
 
@@ -80,41 +146,48 @@ def make_sharded_search_fn(
     backend: str | None = None,
     width: int = 4,
     mixed: bool = False,
+    plane_tag: str = "f32",
+    has_rerank: bool = False,
 ):
-    """Build the jittable sharded search step.
+    """Build the jittable sharded search step over a :class:`ShardedIndex`.
 
-    Inside ``shard_map`` every device runs Alg. 5 + Alg. 4 on its rows, then
-    the per-shard top-k are merged across the index axes.  With
-    ``hierarchical=True`` and 2 index axes (pod, data), the merge reduces
-    intra-pod first so only ``k`` candidates per pod cross the pod axis.
-    ``backend``/``width`` select the shard-local search pipeline (fused
-    multi-expansion by default; see core/search.py).
+    Inside ``shard_map`` every device runs Alg. 5 + Alg. 4 on its rows —
+    through the *same* store-based ``beam_search_flags`` the single-host
+    path serves, so plane dispatch (f32/bf16/int8 + rerank) carries over
+    unchanged — then the per-shard top-k are merged across the index axes.
+    With ``hierarchical=True`` and 2 index axes (pod, data), the merge
+    reduces intra-pod first so only ``k`` candidates per pod cross the pod
+    axis.  ``backend``/``width`` select the shard-local search pipeline.
 
     With ``mixed=True`` the returned function takes one extra trailing
     argument — a replicated ``(B,)`` int32 sem-flag array — and the single
-    compiled program serves interleaved IF/IS/RF/RS traffic (the shard-local
-    search is flag-driven either way; DESIGN.md §10).
+    compiled program serves interleaved IF/IS/RF/RS traffic (DESIGN.md §10).
+
+    ``plane_tag``/``has_rerank`` declare the store layout the returned
+    function will be called with (they fix the in_specs pytree; the actual
+    kernel dispatch happens on the store's own tag).
     """
     index_axes = tuple(index_axes)
 
-    def local_search(x, ints, nbrs, status, gids, q_v, q_int, sem_flags):
+    def local_search(store: IndexStore, gids, q_v, q_int, sem_flags):
         # Rows with gids < 0 are pads OR shard-level tombstones (a streaming
         # delete flips the row's gid to -1): both are masked out of the
         # entry structure so they can never be certified by Alg. 5
-        # (Lemma 4.3 soundness), and the same mask threads into the beam
-        # search as the alive mask — tombstoned rows still route traffic
-        # through their edges but never surface (DESIGN.md §11).
+        # (Lemma 4.3 soundness), and the same mask becomes the store's
+        # alive mask — tombstoned rows still route traffic through their
+        # edges but never surface (DESIGN.md §11).
         alive = gids >= 0
-        eidx = build_entry_index(ints, node_mask=alive)
+        eidx = build_entry_index(store.intervals, node_mask=alive)
+        st = store.replace(entry=eidx, alive=alive)
         if backend == "legacy":
             entry = get_entry_flags(eidx, q_int, sem_flags)
         else:
             entry = get_entry_batch_flags(eidx, q_int, sem_flags, width=width)
         res = beam_search_flags(
-            x, ints, nbrs, status, entry, q_v, q_int, sem_flags, alive,
+            st, entry, q_v, q_int, sem_flags,
             ef=ef, k=k, backend=backend, width=width,
         )
-        nloc = x.shape[0]
+        nloc = store.capacity
         g = jnp.where(res.ids >= 0, gids[jnp.clip(res.ids, 0, nloc - 1)], -1)
         return g, res.dist
 
@@ -131,8 +204,8 @@ def make_sharded_search_fn(
             jnp.take_along_axis(gd, order, axis=-1),
         )
 
-    def sharded(x, ints, nbrs, status, gids, q_v, q_int, sem_flags):
-        ids, dist = local_search(x, ints, nbrs, status, gids, q_v, q_int, sem_flags)
+    def sharded(store, gids, q_v, q_int, sem_flags):
+        ids, dist = local_search(store, gids, q_v, q_int, sem_flags)
         if hierarchical:
             # innermost (fast, intra-pod) axis first, then outer axes.
             for ax in reversed(index_axes):
@@ -143,17 +216,29 @@ def make_sharded_search_fn(
             )
         return ids, dist
 
-    row = P(tuple(index_axes))
+    row = P(index_axes)
     rep = P()
+    # The in_specs pytree mirrors the ShardedIndex layout the caller holds.
+    template = IndexStore(
+        plane=VectorPlane(plane_tag, None,
+                          None if plane_tag != "int8" else True,
+                          None if plane_tag != "int8" else True),
+        rerank=None if not has_rerank else VectorPlane("f32", None),
+        intervals=None, nbrs=None, status=None, entry=None,
+    )
+    store_specs = store_pspecs(template, index_axes)
     if mixed:
-        body, in_specs = sharded, (row,) * 5 + (rep, rep, rep)
-    else:
-        # Static-semantics signature (7 args): flags broadcast from ``sem``.
-        def body(x, ints, nbrs, status, gids, q_v, q_int):
-            flags = jnp.full(q_v.shape[:1], sem.flag, jnp.int32)
-            return sharded(x, ints, nbrs, status, gids, q_v, q_int, flags)
+        def body(sidx, q_v, q_int, sem_flags):
+            return sharded(sidx.store, sidx.global_ids, q_v, q_int, sem_flags)
 
-        in_specs = (row,) * 5 + (rep, rep)
+        in_specs = (ShardedIndex(store_specs, row), rep, rep, rep)
+    else:
+        # Static-semantics signature: flags broadcast from ``sem``.
+        def body(sidx, q_v, q_int):
+            flags = jnp.full(q_v.shape[:1], sem.flag, jnp.int32)
+            return sharded(sidx.store, sidx.global_ids, q_v, q_int, flags)
+
+        in_specs = (ShardedIndex(store_specs, row), rep, rep)
     fn = shard_map(
         body,
         mesh=mesh,
@@ -167,17 +252,19 @@ def make_sharded_search_fn(
 # --------------------------------------------------------------------------
 # Ring-streamed exact KNN (distributed candidate bootstrap)
 # --------------------------------------------------------------------------
-def make_ring_knn_fn(mesh: Mesh, *, axis: str = "data", k: int = 32):
-    """Exact KNN graph over a row-sharded corpus via a ``ppermute`` ring.
+def _ring_knn_step_fn(axis: str, k: int, *, same_shard_of: int | None = None):
+    """Shared body of the ring passes: every step scores the local rows
+    against the visiting column block and folds the result into the running
+    top-k; the block then moves one hop around the ring.
 
-    Each step, every shard scores its rows against the visiting column block
-    and folds the result into its running top-k; the block then moves one hop
-    around the ring.  After ``n_shards`` steps every pair has been scored.
-    This is the sharded replacement for NN-descent bootstrap on corpora that
-    exceed a single host (DESIGN.md §4).
+    ``same_shard_of=None`` keeps every candidate (global exact KNN);
+    ``same_shard_of=S`` keeps only candidates of the caller's own shard
+    under the round-robin layout (``gid % S == me``) and returns their
+    *shard-local* ids (``gid // S``) — the bootstrap of the on-device
+    sharded build, where the per-shard graph may only reference own rows.
     """
 
-    def ring_knn(x, gids):
+    def ring(x, gids):
         nloc = x.shape[0]
         size = compat.axis_size(axis)
         me = jax.lax.axis_index(axis)
@@ -185,16 +272,20 @@ def make_ring_knn_fn(mesh: Mesh, *, axis: str = "data", k: int = 32):
 
         def step(carry, _):
             blk_x, blk_ids, best_i, best_d = carry
-            d = jnp.sum(
-                (x[:, None, :].astype(jnp.float32) - blk_x[None, :, :].astype(jnp.float32)) ** 2,
-                axis=-1,
-            )
-            d = jnp.where(blk_ids[None, :] == gids[:, None], jnp.inf, d)  # self
+            d = squared_dist(x, blk_x)                       # (nloc, blk)
+            keep = (blk_ids[None, :] != gids[:, None]) & (blk_ids >= 0)[None, :]
+            if same_shard_of is not None:
+                keep = keep & ((blk_ids % same_shard_of) == me)[None, :]
+                cand_pool = blk_ids // same_shard_of         # shard-local ids
+            else:
+                cand_pool = blk_ids
+            d = jnp.where(keep, d, jnp.inf)
             take = min(k, blk_x.shape[0])
             neg, idx = jax.lax.top_k(-d, take)
             cand_ids = jnp.take_along_axis(
-                jnp.broadcast_to(blk_ids[None, :], d.shape), idx, axis=-1
+                jnp.broadcast_to(cand_pool[None, :], d.shape), idx, axis=-1
             )
+            cand_ids = jnp.where(jnp.isfinite(neg), cand_ids, -1)
             best_i, best_d = merge_topk(best_i, best_d, cand_ids, -neg, k)
             blk_x = jax.lax.ppermute(blk_x, axis, perm)
             blk_ids = jax.lax.ppermute(blk_ids, axis, perm)
@@ -209,12 +300,135 @@ def make_ring_knn_fn(mesh: Mesh, *, axis: str = "data", k: int = 32):
         (_, _, best_i, best_d), _ = jax.lax.scan(step, init, None, length=size)
         return best_i, best_d
 
+    return ring
+
+
+def make_ring_knn_fn(mesh: Mesh, *, axis: str = "data", k: int = 32):
+    """Exact KNN graph over a row-sharded corpus via a ``ppermute`` ring.
+
+    Each step, every shard scores its rows against the visiting column block
+    and folds the result into its running top-k; the block then moves one hop
+    around the ring.  After ``n_shards`` steps every pair has been scored.
+    This is the sharded replacement for NN-descent bootstrap on corpora that
+    exceed a single host (DESIGN.md §4); the same ring (own-shard-masked)
+    bootstraps the on-device sharded build.
+    """
     row = P((axis,))
     fn = shard_map(
-        ring_knn, mesh=mesh, in_specs=(row, row), out_specs=(row, row),
-        check_vma=False,
+        _ring_knn_step_fn(axis, k), mesh=mesh, in_specs=(row, row),
+        out_specs=(row, row), check_vma=False,
     )
     return jax.jit(fn)
+
+
+# --------------------------------------------------------------------------
+# Construction
+# --------------------------------------------------------------------------
+def _round_robin_layout(n: int, S: int):
+    """Round-robin partition: shard ``s`` slot ``j`` ↔ global id ``s + j·S``
+    (identical to the host reference path).  Returns the flat (S·per,) gid
+    array with ``-1`` pads; at most one pad row per shard."""
+    per = (n + S - 1) // S
+    gid = (np.arange(S)[:, None] + np.arange(per)[None, :] * S).reshape(-1)
+    return np.where(gid < n, gid, -1).astype(np.int32), per
+
+
+def build_sharded_store(
+    mesh: Mesh,
+    x: np.ndarray,
+    intervals: np.ndarray,
+    cfg,
+    *,
+    index_axes: Sequence[str] = ("data",),
+    dtype: str = "f32",
+    rerank: bool = False,
+    backend: str | None = None,
+) -> ShardedIndex:
+    """On-device sharded build (DESIGN.md §12): one jitted ``shard_map``
+    program constructs every shard's unified graph in parallel.
+
+    Per shard: the ring-KNN bootstrap (own-shard-masked exact KNN through
+    the ``ppermute`` pipeline — no shard ever holds more than one visiting
+    block) supplies the spatial candidates, shard-local attribute sort
+    orders the Alg. 1 interval candidates, and ``build.refine_candidates``
+    — the *same* jitted ``_prune_all`` + repair-scatter iterations the
+    single-host build runs — refines them into the final graph.  No
+    per-shard host ``build_ug`` calls, no round-robin numpy padding loop:
+    the only host work is the O(n) round-robin permutation and a single
+    device→host sync for the trailing-column trim.
+
+    Rows partition round-robin exactly like the host reference
+    (:func:`build_sharded_index_host`), so the two paths build statistically
+    identical shards (the parity test pins sharded-search recall within
+    0.01 across all four semantics).
+    """
+    if len(index_axes) != 1:
+        raise NotImplementedError(
+            "on-device sharded build rings over one index axis; flatten "
+            "multi-axis meshes into the data axis for construction")
+    axis = index_axes[0]
+    S = mesh.shape[axis]
+    x = np.asarray(x)
+    intervals = np.asarray(intervals)
+    n, d = x.shape
+    gids, per = _round_robin_layout(n, S)
+    n_pad = per * S
+
+    safe = np.clip(gids, 0, n - 1)
+    xs = np.where((gids >= 0)[:, None], x[safe], 0.0).astype(np.float32)
+    its = np.where(
+        (gids >= 0)[:, None], intervals[safe],
+        np.asarray([2.0, -2.0], intervals.dtype),  # pads: no predicate matches
+    )
+
+    row = NamedSharding(mesh, P((axis,)))
+    xs_d = jax.device_put(jnp.asarray(xs), row)
+    its_d = jax.device_put(jnp.asarray(its), row)
+    gids_d = jax.device_put(jnp.asarray(gids), row)
+
+    ring = _ring_knn_step_fn(axis, int(cfg.ef_spatial), same_shard_of=S)
+
+    def shard_build(xloc, ivloc, gidloc):
+        valid = gidloc >= 0
+        nloc = xloc.shape[0]
+        # (1) spatial candidates: ring-KNN bootstrap masked to own shard.
+        spa, _ = ring(xloc, gidloc)
+        # (2) attribute candidates: shard-local Alg. 1 sort orders.
+        attr = attribute_candidates(ivloc, cfg.ef_attribute)
+        cand = jnp.concatenate([spa, attr], axis=1)
+        self_ids = jnp.arange(nloc, dtype=jnp.int32)[:, None]
+        cand = jnp.where(cand == self_ids, -1, cand)
+        cand_c = jnp.clip(cand, 0, nloc - 1)
+        cand = jnp.where((cand >= 0) & valid[cand_c], cand, -1)
+        # (3) the jitted prune/repair iterations (same program as build_ug).
+        nbrs, stat, _ = refine_candidates(xloc, ivloc, cand, cfg, backend)
+        nbrs = jnp.where(valid[:, None] & (nbrs >= 0), nbrs, -1)
+        stat = jnp.where(nbrs >= 0, stat, 0).astype(jnp.uint8)
+        return nbrs, stat
+
+    rowp = P((axis,))
+    build_fn = jax.jit(shard_map(
+        shard_build, mesh=mesh, in_specs=(rowp, rowp, rowp),
+        out_specs=(rowp, rowp), check_vma=False,
+    ))
+    nbrs, stat = build_fn(xs_d, its_d, gids_d)
+
+    # Single device→host sync: global trailing-column trim across shards.
+    live_cols = max(int(jnp.max(jnp.sum(nbrs >= 0, axis=1))), 1)
+    nbrs = jax.device_put(nbrs[:, :live_cols], row)
+    stat = jax.device_put(stat[:, :live_cols], row)
+
+    qparams = quantization_params(jnp.asarray(x)) if dtype == "int8" else None
+    store = IndexStore(
+        plane=VectorPlane.encode(jnp.asarray(xs), dtype, qparams),
+        rerank=VectorPlane.encode(jnp.asarray(xs), "f32") if rerank else None,
+        intervals=its_d, nbrs=nbrs, status=stat, entry=None,
+    )
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), store_pspecs(store, index_axes),
+        is_leaf=lambda v: isinstance(v, P),
+    )
+    return ShardedIndex(jax.device_put(store, shardings), gids_d)
 
 
 def build_sharded_index_host(
@@ -224,9 +438,11 @@ def build_sharded_index_host(
     cfg,
     seed: int = 0,
 ):
-    """Host-side helper: partition rows round-robin and build one UG per
-    shard (heredity ⇒ per-shard graphs are sound).  Returns per-shard arrays
-    padded to a common width, ready for :func:`shard_index`."""
+    """Host-side reference: partition rows round-robin and build one UG per
+    shard with the serial single-host builder (heredity ⇒ per-shard graphs
+    are sound).  Returns per-shard arrays padded to a common width, ready
+    for :func:`shard_index`.  Kept as the parity yardstick for
+    :func:`build_sharded_store` (which replaces it on the hot path)."""
     from repro.core.build import build_ug
 
     n = x.shape[0]

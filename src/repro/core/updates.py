@@ -5,11 +5,16 @@ production interval-aware service sees continuous churn — listings expire,
 prices move, validity windows shift.  This module turns that lifecycle into
 a jitted, batched subsystem (DESIGN.md §11):
 
-* **slot allocator** — ``UGIndex`` arrays are sized to a power-of-two
-  ``capacity``; ``alive`` marks live nodes, ``free`` the slots the
-  allocator may hand out.  Growth doubles capacity, so array shapes (and
-  therefore compiled programs) change O(log n) times over any insert
-  stream;
+* **slot allocator** — the :class:`~repro.core.store.IndexStore` arrays
+  are sized to a power-of-two ``capacity``; ``alive`` marks live nodes,
+  ``free`` the slots the allocator may hand out.  The allocator lives on
+  the store (``masks``/``widen_rows``/``grow``, DESIGN.md §12); growth
+  doubles capacity, so array shapes (and therefore compiled programs)
+  change O(log n) times over any insert stream.  Vector planes ride
+  along: new rows are encoded under each plane's frozen quantization
+  parameters, pruning distances run over the best-precision f32 view
+  (the rerank plane when present, else the decoded scan plane —
+  identity for f32);
 * **insert_batch** — one jitted program per (batch, capacity) shape:
   candidate acquisition via the *existing fused beam search* (spatial) +
   the Alg. 1 interval sort orders (attribute), ``UnifiedPrune`` for the new
@@ -58,12 +63,10 @@ import numpy as np
 from repro.core import intervals as ivm
 from repro.core.build import UGConfig, scatter_repairs
 from repro.core.entry import build_entry_index, get_entry_batch_flags
-from repro.core.exact import DenseGraph
 from repro.core.index import UGIndex
 from repro.core.prune import unified_prune
 from repro.core.search import beam_search_flags
 from repro.kernels import ops
-from repro.kernels.beam_merge import next_pow2
 from repro.kernels.expand_score import dedup_first
 from repro.kernels.util import pad_to
 
@@ -72,54 +75,11 @@ from repro.kernels.util import pad_to
 # search behaves as an unconstrained spatial ANN over the live corpus.
 _WIDE = 1e30
 
-
-# ---------------------------------------------------------------- allocator
-def _with_masks(index: UGIndex):
-    """Materialize the lazy all-live / none-free masks of a static index."""
-    cap = index.x.shape[0]
-    alive = index.alive if index.alive is not None else jnp.ones((cap,), bool)
-    free = index.free if index.free is not None else jnp.zeros((cap,), bool)
-    return alive, free
-
-
-def _widen_rows(index: UGIndex):
-    """Widen the neighbor rows to the degree-budget bound ``m_if + m_is``.
-
-    The build trims trailing all-dead columns (a static-index memory win);
-    a streaming index needs that headroom back so reverse offers and repair
-    bridges can spend what remains of the per-semantics budgets instead of
-    being blocked by a full row.  :func:`compact` re-trims.
-    """
-    nbrs, status = index.graph.nbrs, index.graph.status
-    cfg = index.config
-    m_full = cfg.max_edges_if + cfg.max_edges_is
-    r = m_full - nbrs.shape[1]
-    if r <= 0:
-        return nbrs, status
-    nbrs = jnp.pad(nbrs, ((0, 0), (0, r)), constant_values=-1)
-    return nbrs, jnp.pad(status, ((0, 0), (0, r)))
-
-
-def _grow(index: UGIndex, alive, free, need: int):
-    """Capacity-doubling growth: return slot arrays with ≥ ``need`` free
-    slots.  Virgin slots get inverted intervals ``[2, -2]`` (no predicate
-    ever matches), ``-1`` neighbor rows, and ``free=True``."""
-    cap = index.x.shape[0]
-    n_free = int(jnp.sum(free))
-    x, ivs = index.x, index.intervals
-    nbrs, status = _widen_rows(index)
-    if n_free >= need:
-        return x, ivs, nbrs, status, alive, free
-    new_cap = max(2 * cap, next_pow2(cap + need - n_free))
-    r = new_cap - cap
-    x = jnp.pad(x, ((0, r), (0, 0)))
-    dead_iv = jnp.broadcast_to(jnp.asarray([2.0, -2.0], ivs.dtype), (r, 2))
-    ivs = jnp.concatenate([ivs, dead_iv])
-    nbrs = jnp.pad(nbrs, ((0, r), (0, 0)), constant_values=-1)
-    status = jnp.pad(status, ((0, r), (0, 0)))
-    alive = jnp.pad(alive, (0, r))
-    free = jnp.pad(free, (0, r), constant_values=True)
-    return x, ivs, nbrs, status, alive, free
+# The slot allocator itself lives on the store (DESIGN.md §12):
+# ``IndexStore.masks`` materializes the lazy alive/free masks,
+# ``IndexStore.widen_rows`` restores the update-time degree headroom, and
+# ``IndexStore.grow`` doubles capacity.  The pipelines below consume a
+# store whose masks are already materialized.
 
 
 # ------------------------------------------------------------------- insert
@@ -128,7 +88,7 @@ def _grow(index: UGIndex, alive, free, need: int):
     static_argnames=("cfg", "backend", "search_backend", "ef", "width"),
 )
 def _insert_core(
-    x, ivs, nbrs, status, alive, free,   # slot arrays (capacity-sized)
+    store,                               # IndexStore (masks materialized)
     new_x, new_iv, valid,                # the batch; ``valid`` masks pad rows
     *,
     cfg: UGConfig,
@@ -142,7 +102,17 @@ def _insert_core(
     Pad rows (``valid=False``, from the serve-path shape buckets) flow
     through every stage with sentinel slot ``cap`` and are dropped by every
     scatter — a padded batch is bitwise equal to the unpadded one.
+
+    Candidate acquisition searches the store's *scan plane* (so a quantized
+    index acquires through the same kernels it serves with); pruning and
+    reverse-offer distances run over the best-precision f32 view (the
+    rerank plane when present, else the decoded scan plane — identity for
+    f32).  New rows are encoded into every plane under its frozen
+    quantization parameters.
     """
+    x = store.vectors_f32()              # pruning-precision (cap, d) f32 view
+    ivs, nbrs, status = store.intervals, store.nbrs, store.status
+    alive, free = store.alive, store.free
     cap, d = x.shape
     b = new_x.shape[0]
     M = nbrs.shape[1]
@@ -154,10 +124,27 @@ def _insert_core(
     slot_c = jnp.clip(slots, 0, cap - 1)
 
     alive_old = alive                     # candidates = pre-insert live set
-    x2 = x.at[slots].set(new_x.astype(x.dtype), mode="drop")
+    new32 = new_x.astype(jnp.float32)
+    x2 = x.at[slots].set(new32, mode="drop")
     iv2 = ivs.at[slots].set(new_iv.astype(ivs.dtype), mode="drop")
     alive2 = alive.at[slots].set(True, mode="drop")
     free2 = free.at[slots].set(False, mode="drop")
+
+    # ---- plane updates: encode the new rows under each plane's frozen
+    # parameters.  When the f32 scan plane IS the pruning view, its update
+    # is exactly ``x2`` (no second scatter).
+    if store.plane.tag == "f32" and store.rerank is None:
+        plane2 = dataclasses.replace(store.plane, data=x2)
+        rerank2 = None
+    else:
+        plane2 = dataclasses.replace(
+            store.plane,
+            data=store.plane.data.at[slots].set(
+                store.plane.encode_rows(new32), mode="drop"),
+        )
+        rerank2 = None if store.rerank is None else dataclasses.replace(
+            store.rerank, data=x2,
+        )
 
     # ---- (1a) spatial candidates: fused beam search on the pre-insert
     # graph.  Two acquisition passes through ONE compiled program (runtime
@@ -174,9 +161,9 @@ def _insert_core(
     for flag, q_int in ((ivm.FLAG_IF, wide), (ivm.FLAG_IS, point)):
         flags = jnp.full((b,), flag, jnp.int32)
         res_s = beam_search_flags(
-            x, ivs, nbrs, status,
+            store,   # pre-insert store (plane, graph, tombstone mask)
             get_entry_batch_flags(eidx_old, q_int, flags, width=width),
-            new_x.astype(jnp.float32), q_int, flags, alive_old,
+            new32, q_int, flags,
             ef=ef, k=k_spa, backend=search_backend, width=width,
         )
         spas.append(res_s.ids)
@@ -271,7 +258,11 @@ def _insert_core(
     )
 
     eidx = build_entry_index(iv2, node_mask=alive2)
-    return x2, iv2, nbrs2, status2, alive2, free2, eidx, slots
+    out = store.replace(
+        plane=plane2, rerank=rerank2, intervals=iv2, nbrs=nbrs2,
+        status=status2, entry=eidx, alive=alive2, free=free2,
+    )
+    return out, slots
 
 
 def insert_batch(
@@ -302,24 +293,20 @@ def insert_batch(
     new_iv = jnp.atleast_2d(jnp.asarray(new_intervals))
     b = new_x.shape[0]
     cfg = index.config
-    alive, free = _with_masks(index)
     if valid is None:
         valid = jnp.ones((b,), bool)
     else:
         valid = jnp.asarray(valid, bool)
     need = int(jnp.sum(valid))
-    x, ivs, nbrs, status, alive, free = _grow(index, alive, free, need)
+    store = index.store.grow(need, cfg.max_edges_if + cfg.max_edges_is)
     if ef is None:
         ef = max(2 * cfg.ef_spatial, 48)
-    x2, iv2, nbrs2, status2, alive2, free2, eidx, _ = _insert_core(
-        x, ivs, nbrs, status, alive, free, new_x, new_iv, valid,
+    store2, _ = _insert_core(
+        store, new_x, new_iv, valid,
         cfg=cfg, backend=backend if backend is not None else cfg.prune_backend,
         search_backend=search_backend, ef=ef, width=width,
     )
-    return dataclasses.replace(
-        index, x=x2, intervals=iv2, graph=DenseGraph(nbrs2, status2),
-        entry=eidx, alive=alive2, free=free2,
-    )
+    return index.with_store(store2)
 
 
 def insert(index: UGIndex, new_x, new_intervals) -> UGIndex:
@@ -547,10 +534,14 @@ def repair_deleted(
     and marked reusable.  ``pool`` caps the per-row candidate pool (default
     ``4·M``); ``repair_iters`` adds Alg. 2 witness-repair rounds.
     """
-    alive, free = _with_masks(index)
+    store = index.store
+    alive, free = store.masks()
     cfg = index.config
-    cap = index.x.shape[0]
-    nbrs, status = _widen_rows(index)  # budget headroom for the bridges
+    cap = store.capacity
+    # budget headroom for the bridges + the f32 pruning view of the vectors
+    widened = store.widen_rows(cfg.max_edges_if + cfg.max_edges_is)
+    nbrs, status = widened.nbrs, widened.status
+    x = store.vectors_f32()
     M = nbrs.shape[1]
     del_mask = (~alive) & (~free)
     backend = backend if backend is not None else cfg.prune_backend
@@ -576,7 +567,7 @@ def repair_deleted(
             cap, M,
         )
         nbrs, status, w_w, w_v = _repair_core(
-            index.x, index.intervals, nbrs, status, del_mask, in_sets, rows,
+            x, store.intervals, nbrs, status, del_mask, in_sets, rows,
             P=P, block=block, **kw,
         )
         for _ in range(1, repair_iters):
@@ -587,15 +578,15 @@ def repair_deleted(
                 break
             rows = _pad_rows_1d(a_idx, block)
             nbrs, status, w_w, w_v = _repair_round(
-                index.x, index.intervals, nbrs, status, del_mask, rep, rows,
+                x, store.intervals, nbrs, status, del_mask, rep, rows,
                 block=block, **kw,
             )
 
     # Detached: clear the dead rows and hand their slots to the allocator.
     nbrs = jnp.where(del_mask[:, None], -1, nbrs)
     status = jnp.where(del_mask[:, None], 0, status)
-    return dataclasses.replace(
-        index, graph=DenseGraph(nbrs, status), free=free | del_mask,
+    return index.with_store(
+        store.replace(nbrs=nbrs, status=status, free=free | del_mask)
     )
 
 
@@ -619,16 +610,15 @@ def delete_batch(
     search overhead while tombstones accumulate).
     """
     ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
-    alive, free = _with_masks(index)
-    cap = index.x.shape[0]
+    alive, free = index.store.masks()
+    cap = index.store.capacity
     tgt = jnp.where(ids >= 0, ids, cap)
     del_mask = jnp.zeros((cap,), bool).at[tgt].set(True, mode="drop") & alive
     alive2 = alive & ~del_mask
-    out = dataclasses.replace(
-        index,
-        entry=build_entry_index(index.intervals, node_mask=alive2),
+    out = index.with_store(index.store.replace(
+        entry=build_entry_index(index.store.intervals, node_mask=alive2),
         alive=alive2, free=free,
-    )
+    ))
     if repair:
         out = repair_deleted(
             out, repair_iters=repair_iters, pool=pool, backend=backend,
@@ -650,16 +640,17 @@ def compact(index: UGIndex) -> UGIndex:
     """
     if index.alive is None:
         return index
-    alive0, free0 = _with_masks(index)
+    alive0, free0 = index.store.masks()
     if bool(jnp.any((~alive0) & (~free0))):
         index = repair_deleted(index)
-    cap = index.x.shape[0]
-    live = np.asarray(index.alive)
+    store = index.store
+    cap = store.capacity
+    live = np.asarray(store.alive)
     old_ids = np.flatnonzero(live)
     remap = np.full((cap,), -1, np.int32)
     remap[old_ids] = np.arange(old_ids.size, dtype=np.int32)
-    nb = np.asarray(index.graph.nbrs)[old_ids]
-    st = np.asarray(index.graph.status)[old_ids]
+    nb = np.asarray(store.nbrs)[old_ids]
+    st = np.asarray(store.status)[old_ids]
     nb2 = np.where(nb >= 0, remap[np.clip(nb, 0, cap - 1)], -1)
     st2 = np.where(nb2 >= 0, st, 0)
     order = np.argsort(nb2 < 0, axis=1, kind="stable")  # holes to the back
@@ -667,13 +658,17 @@ def compact(index: UGIndex) -> UGIndex:
     st2 = np.take_along_axis(st2, order, axis=1)
     live_cols = max(int((nb2 >= 0).sum(axis=1).max()) if nb2.size else 1, 1)
     nb2, st2 = nb2[:, :live_cols], st2[:, :live_cols]
-    ivs = index.intervals[jnp.asarray(old_ids)]
-    return dataclasses.replace(
-        index,
-        x=index.x[jnp.asarray(old_ids)], intervals=ivs,
-        graph=DenseGraph(jnp.asarray(nb2), jnp.asarray(st2.astype(st.dtype))),
-        entry=build_entry_index(ivs), alive=None, free=None,
+    rows = jnp.asarray(old_ids)
+    ivs = store.intervals[rows]
+    gather_plane = lambda p: None if p is None else dataclasses.replace(
+        p, data=p.data[rows]
     )
+    return index.with_store(store.replace(
+        plane=gather_plane(store.plane), rerank=gather_plane(store.rerank),
+        intervals=ivs,
+        nbrs=jnp.asarray(nb2), status=jnp.asarray(st2.astype(st.dtype)),
+        entry=build_entry_index(ivs), alive=None, free=None,
+    ))
 
 
 # ----------------------------------------------------------- memory profile
@@ -705,6 +700,7 @@ def update_memory_profile(
     ``backend="xla" | "pallas"`` must show neither; ``"legacy"`` routes the
     pre-fusion prune/expand baselines and shows both.
     """
+    from repro.core.store import IndexStore, VectorPlane
     from repro.kernels.prune_sweep import _iter_eqn_avals
 
     f32, i32 = jnp.float32, jnp.int32
@@ -718,13 +714,18 @@ def update_memory_profile(
     c_search = max(min(width, ef), 1) * M  # fused search candidate width
     c_bridge = M + 2 * M * M               # raw repair bridge width
 
+    store_sds = IndexStore(
+        plane=VectorPlane("f32", jax.ShapeDtypeStruct((cap, d), f32)),
+        rerank=None,
+        intervals=jax.ShapeDtypeStruct((cap, 2), f32),
+        nbrs=jax.ShapeDtypeStruct((cap, M), i32),
+        status=jax.ShapeDtypeStruct((cap, M), jnp.uint8),
+        entry=None,
+        alive=jax.ShapeDtypeStruct((cap,), jnp.bool_),
+        free=jax.ShapeDtypeStruct((cap,), jnp.bool_),
+    )
     insert_args = (
-        jax.ShapeDtypeStruct((cap, d), f32),       # x
-        jax.ShapeDtypeStruct((cap, 2), f32),       # intervals
-        jax.ShapeDtypeStruct((cap, M), i32),       # nbrs
-        jax.ShapeDtypeStruct((cap, M), jnp.uint8),  # status
-        jax.ShapeDtypeStruct((cap,), jnp.bool_),   # alive
-        jax.ShapeDtypeStruct((cap,), jnp.bool_),   # free
+        store_sds,
         jax.ShapeDtypeStruct((b, d), f32),
         jax.ShapeDtypeStruct((b, 2), f32),
         jax.ShapeDtypeStruct((b,), jnp.bool_),

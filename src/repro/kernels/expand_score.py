@@ -98,6 +98,113 @@ def expand_score(
 gather_sq_dist = expand_score
 
 
+# -------------------------------------------------------------- pallas (int8)
+def _kernel_q(idx_ref, q_ref, x_ref, s_ref, z_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)                  # (1, d)
+    xq = x_ref[...].astype(jnp.float32)                 # (1, d) int8 row
+    diff = q - (xq * s_ref[...] + z_ref[...])           # dequant in-register
+    o_ref[0, 0] = jnp.sum(diff * diff)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def expand_score_q(
+    x: jnp.ndarray,      # (n, d) int8 quantized corpus plane
+    scale: jnp.ndarray,  # (d,) f32 per-dimension scale
+    zero: jnp.ndarray,   # (d,) f32 per-dimension zero point
+    idx: jnp.ndarray,    # (B, C) int32 candidate ids (-1 = masked/padding)
+    q: jnp.ndarray,      # (B, d) queries
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Quantized-plane :func:`expand_score`: the DMA'd ``(1, d)`` row is int8
+    and dequantized in-register (``x·scale + zero``) before the square-diff
+    sum — the f32 row never exists in HBM, so the per-step row traffic drops
+    4× against the f32 plane.  Same scalar-prefetch schedule, same
+    ``(B, C, d)``-free guarantee, and the same elementwise reduction that
+    makes the XLA twin bit-identical under any chunking."""
+    B, C = idx.shape
+    d = x.shape[1]
+    safe = jnp.clip(idx, 0, x.shape[0] - 1).astype(jnp.int32)
+    s2 = scale.astype(jnp.float32).reshape(1, d)
+    z2 = zero.astype(jnp.float32).reshape(1, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, C),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, c, idx_ref: (b, 0)),
+            pl.BlockSpec((1, d), lambda b, c, idx_ref: (idx_ref[b, c], 0)),
+            pl.BlockSpec((1, d), lambda b, c, idx_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda b, c, idx_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, c, idx_ref: (b, c)),
+    )
+    out = pl.pallas_call(
+        _kernel_q,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        compiler_params=compiler_params(("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(safe, q, x, s2, z2)
+    return jnp.where(idx >= 0, out, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def expand_score_q_xla(
+    x: jnp.ndarray,      # (n, d) int8
+    scale: jnp.ndarray,  # (d,) f32
+    zero: jnp.ndarray,   # (d,) f32
+    idx: jnp.ndarray,    # (B, C) int32, -1 = masked
+    q: jnp.ndarray,      # (B, d)
+    *,
+    chunk: int = 32,
+) -> jnp.ndarray:
+    """CPU-CI twin of :func:`expand_score_q`: identical dequant + elementwise
+    network over ``chunk``-wide candidate slices (peak ``(B, chunk, d)``,
+    never ``(B, C, d)``); bit-identical to the Pallas kernel."""
+    B, C = idx.shape
+    n, d = x.shape
+    q32 = q.astype(jnp.float32)
+    s32 = scale.astype(jnp.float32)
+    z32 = zero.astype(jnp.float32)
+    chunk = max(min(chunk, (C + 1) // 2 if C > 1 else 1), 1)
+    Cp = ((C + chunk - 1) // chunk) * chunk
+    safe = jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+    if Cp != C:
+        safe = jnp.pad(safe, ((0, 0), (0, Cp - C)))
+
+    def body(t, acc):
+        sl = jax.lax.dynamic_slice_in_dim(safe, t * chunk, chunk, axis=1)
+        rows = x[sl].astype(jnp.float32)               # (B, chunk, d) int8→f32
+        diff = q32[:, None, :] - (rows * s32 + z32)
+        dc = jnp.sum(diff * diff, axis=-1)             # (B, chunk)
+        return jax.lax.dynamic_update_slice_in_dim(acc, dc, t * chunk, axis=1)
+
+    out = jax.lax.fori_loop(
+        0, Cp // chunk, body, jnp.zeros((B, Cp), jnp.float32)
+    )[:, :C]
+    return jnp.where(idx >= 0, out, jnp.inf)
+
+
+@jax.jit
+def expand_score_q_legacy(
+    x: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+    idx: jnp.ndarray, q: jnp.ndarray,
+) -> jnp.ndarray:
+    """Pre-fusion baseline on the quantized plane: materialize the dequantized
+    ``(B, C, d)`` gather, score with the matmul identity (A/B profiling)."""
+    n = x.shape[0]
+    q32 = q.astype(jnp.float32)
+    qn = jnp.sum(q32 * q32, axis=-1)
+    safe = jnp.clip(idx, 0, n - 1)
+    rows = x[safe].astype(jnp.float32) * scale.astype(jnp.float32) \
+        + zero.astype(jnp.float32)                     # (B, C, d) gather
+    xn = jnp.sum(rows * rows, axis=-1)
+    ip = jnp.einsum("bcd,bd->bc", rows, q32)
+    dist = jnp.maximum(xn + qn[:, None] - 2.0 * ip, 0.0)
+    return jnp.where(idx >= 0, dist, jnp.inf)
+
+
 # --------------------------------------------------------------------- xla
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def expand_score_xla(

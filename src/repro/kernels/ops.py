@@ -66,6 +66,30 @@ def expand_score(
     return expand_score_mod.expand_score(x, idx, q, interpret=on_cpu())
 
 
+def expand_score_plane(plane, idx: jnp.ndarray, q: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    """Beam-expansion scoring against a vector *plane* (core/store.py),
+    dispatched on the plane's dtype tag.
+
+    ``f32``/``bf16`` route through :func:`expand_score` unchanged (the row
+    DMA casts in-register, so bf16 needs no twin); ``int8`` routes through
+    the quantized kernels, which dequantize the ``(1, d)`` row in-register
+    (``x·scale + zero``) — same scalar-prefetch schedule, same traced
+    memory profile, 4× less row traffic.  ``plane`` is duck-typed
+    (``tag``/``data``/``scale``/``zero``) so the kernels layer never
+    imports core."""
+    if plane.tag != "int8":
+        return expand_score(plane.data, idx, q, backend=backend)
+    resolved = resolve_backend(backend, choices=("pallas", "xla", "legacy"))
+    if resolved == "legacy":
+        return expand_score_mod.expand_score_q_legacy(
+            plane.data, plane.scale, plane.zero, idx, q)
+    if resolved == "xla":
+        return expand_score_mod.expand_score_q_xla(
+            plane.data, plane.scale, plane.zero, idx, q)
+    return expand_score_mod.expand_score_q(
+        plane.data, plane.scale, plane.zero, idx, q, interpret=on_cpu())
+
+
 def gather_sq_dist(x: jnp.ndarray, idx: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     """Beam-expansion scoring via scalar-prefetch row gather (historical
     name from the absorbed ``kernels/gather_dist.py``)."""

@@ -20,6 +20,36 @@ def pad_rows(a: jnp.ndarray, n_pad: int, fill) -> jnp.ndarray:
     )
 
 
+def segment_scatter(
+    seg_ids: jnp.ndarray, values: jnp.ndarray, n: int, width: int
+) -> jnp.ndarray:
+    """Fixed-width per-segment buffers from flat ``(segment, value)`` pairs.
+
+    The one sort-by-segment + rank scatter every fixed-shape "inverted list"
+    in this repo reduces to: Alg. 2 repair sets (``build.scatter_repairs``),
+    NN-descent reverse edges (``candidates._reverse_candidates``), and the
+    in-neighbor sets of the delete-repair sweep (``core/updates.py``).
+
+    Pairs with either side negative are dropped; segment ``s`` keeps the
+    first ``width`` surviving values *in scan (flat-index) order* — the
+    stable segment sort breaks ties by position, so ``searchsorted`` rank
+    equals scan rank.  Returns ``(n, width)`` int32, ``-1``-padded.
+    """
+    valid = (seg_ids >= 0) & (values >= 0)
+    seg = jnp.where(valid, seg_ids, n)
+    order = jnp.argsort(seg, stable=True)
+    seg_s = seg[order]
+    val_s = values[order]
+    first = jnp.searchsorted(seg_s, seg_s, side="left")
+    rank = jnp.arange(seg_s.shape[0]) - first
+    ok = (seg_s < n) & (rank < width)
+    out = jnp.full((n + 1, width), -1, jnp.int32)
+    out = out.at[jnp.where(ok, seg_s, n), jnp.where(ok, rank, 0)].set(
+        jnp.where(ok, val_s, -1), mode="drop"
+    )
+    return out[:n]
+
+
 def compiler_params(dimension_semantics: tuple[str, ...]):
     """TPU Mosaic compiler params, version-tolerant across jax releases."""
     from jax.experimental.pallas import tpu as pltpu

@@ -35,6 +35,14 @@ def main(argv=None) -> int:
                     choices=["auto", "pallas", "xla", "legacy"],
                     help="pruning-sweep kernel backend (auto = Pallas on TPU, "
                          "XLA on CPU); all three build bit-identical graphs")
+    ap.add_argument("--dtype", default="f32", choices=["f32", "bf16", "int8"],
+                    help="vector scan plane (DESIGN.md §12): bf16 halves and "
+                         "int8 quarters the per-vector scan bytes; the graph "
+                         "is always built from the f32 vectors")
+    ap.add_argument("--rerank", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="attach the exact f32 rerank plane for final-top-k "
+                         "re-scoring (default: on for int8, off otherwise)")
     ap.add_argument("--out", default=None, help="directory to save the index")
     ap.add_argument("--selftest", action="store_true", default=True)
     args = ap.parse_args(argv)
@@ -48,9 +56,15 @@ def main(argv=None) -> int:
         iterations=args.iterations, exact_spatial=args.n <= 8192,
         prune_backend=None if args.prune_backend == "auto" else args.prune_backend,
     )
-    idx = UGIndex.build(x, ints, cfg, progress=lambda m: print(f"[build] {m}"))
+    idx = UGIndex.build(x, ints, cfg, progress=lambda m: print(f"[build] {m}"),
+                        dtype=args.dtype, rerank=args.rerank)
+    vm = idx.vector_memory_bytes()
     print(f"[build] done in {idx.build_seconds:.1f}s; "
-          f"{idx.memory_bytes():,} bytes; degrees {idx.degree_stats()}")
+          f"{idx.memory_bytes():,} graph bytes; "
+          f"{args.dtype} plane {vm['plane']:,} bytes "
+          f"({vm['plane_bytes_per_vector']:.1f} B/vec"
+          f"{', +f32 rerank' if idx.store.rerank is not None else ''}); "
+          f"degrees {idx.degree_stats()}")
     if args.out:
         idx.save(args.out)
         print(f"[build] saved to {args.out}")

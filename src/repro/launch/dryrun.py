@@ -116,7 +116,10 @@ def build_index_cell(mesh, *, n_global=1 << 20, dim=768, m_deg=64,
                      ef=64, k=10, nq=1024, hierarchical=True):
     """The paper's own technique as a dry-run cell: sharded UG search step."""
     from repro.core import intervals as iv
-    from repro.core.sharded import make_sharded_search_fn
+    from repro.core.sharded import (
+        ShardedIndex, make_sharded_search_fn, store_pspecs,
+    )
+    from repro.core.store import IndexStore, VectorPlane
 
     index_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     fn = make_sharded_search_fn(
@@ -126,16 +129,26 @@ def build_index_cell(mesh, *, n_global=1 << 20, dim=768, m_deg=64,
     row = NamedSharding(mesh, P(index_axes))
     rep = NamedSharding(mesh, P())
     sds = lambda s, d: jax.ShapeDtypeStruct(s, d)
+    store_sds = IndexStore(
+        plane=VectorPlane("f32", sds((n_global, dim), jnp.float32)),
+        rerank=None,
+        intervals=sds((n_global, 2), jnp.float32),
+        nbrs=sds((n_global, m_deg), jnp.int32),
+        status=sds((n_global, m_deg), jnp.uint8),
+        entry=None,
+    )
+    sidx = ShardedIndex(store_sds, sds((n_global,), jnp.int32))
     args = (
-        sds((n_global, dim), jnp.float32),     # x
-        sds((n_global, 2), jnp.float32),       # intervals
-        sds((n_global, m_deg), jnp.int32),     # nbrs
-        sds((n_global, m_deg), jnp.uint8),     # status
-        sds((n_global,), jnp.int32),           # global ids
+        sidx,
         sds((nq, dim), jnp.float32),           # queries
         sds((nq, 2), jnp.float32),             # query intervals
     )
-    shardings = (row, row, row, row, row, rep, rep)
+    sidx_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        ShardedIndex(store_pspecs(store_sds, index_axes), P(index_axes)),
+        is_leaf=lambda v: isinstance(v, P),
+    )
+    shardings = (sidx_shardings, rep, rep)
     return fn, args, shardings, None
 
 
@@ -170,6 +183,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, index_cell=False,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         hlo_dir = pathlib.Path("results/hlo")
         hlo_dir.mkdir(parents=True, exist_ok=True)

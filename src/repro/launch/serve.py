@@ -39,6 +39,9 @@ def main(argv=None) -> int:
                     help="search pipeline (default: fused; pallas on TPU, xla on CPU)")
     ap.add_argument("--width", type=int, default=4,
                     help="fused multi-expansion frontier width W")
+    ap.add_argument("--dtype", default="f32", choices=["f32", "bf16", "int8"],
+                    help="vector scan plane of the served index (int8 "
+                         "auto-attaches the f32 rerank plane; DESIGN.md §12)")
     ap.add_argument("--mixed", action="store_true",
                     help="also serve one interleaved IF/IS/RF/RS stream "
                          "through the runtime-semantics path and compare "
@@ -75,9 +78,11 @@ def main(argv=None) -> int:
     ucfg = UGConfig(ef_spatial=32, ef_attribute=64, max_edges_if=32,
                     max_edges_is=32, iterations=3, repair_width=16,
                     exact_spatial=args.docs <= 4096)
-    idx = UGIndex.build(x, intervals, ucfg)
+    idx = UGIndex.build(x, intervals, ucfg, dtype=args.dtype)
     engine.attach_index(idx, backend=args.backend, width=args.width)
+    vm = idx.vector_memory_bytes()
     print(f"[serve] UG built in {idx.build_seconds:.1f}s "
+          f"({args.dtype} plane, {vm['plane_bytes_per_vector']:.1f} B/vec) "
           f"degree stats {idx.degree_stats()}")
 
     # 3) queries under all four semantics (one index!)

@@ -61,7 +61,15 @@ class ServeEngine:
     def attach_index(
         self, index: "UGIndex", *, backend: str | None = None, width: int | None = None
     ) -> None:
-        """Attach a UGIndex; subsequent ``retrieve`` calls run against it."""
+        """Attach a UGIndex; subsequent ``retrieve`` calls run against it.
+
+        The engine holds the index's :class:`IndexStore` pytree **by
+        reference** — attach copies nothing, and every retrieve passes the
+        same device buffers to the search program (zero duplicate device
+        copies; buffer identity is pinned in tests/test_store_planes.py).
+        Functional updates (``upsert``/``remove``) swap the reference for
+        the new store, so readers always see a consistent graph.
+        """
         self.index = index
         if backend is not None:
             self.search_backend = backend

@@ -10,6 +10,7 @@ from repro.core.build import UGConfig
 from repro.core.entry import build_entry_index
 from repro.core.index import UGIndex, recall
 from repro.core.search import brute_force, search
+from repro.core.store import make_store
 
 
 CFG = UGConfig(ef_spatial=24, ef_attribute=48, max_edges_if=24, max_edges_is=24,
@@ -71,7 +72,8 @@ def test_rrng_scalar_special_case():
     qv = jax.random.normal(k3, (16, d))
     c = jax.random.uniform(k4, (16, 1))
     qi = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
-    res = search(x, pts, g.nbrs, g.status, eidx, qv, qi, sem=iv.Semantics.RF, ef=64, k=10)
+    store = make_store(x, pts, g.nbrs, g.status, entry=eidx)
+    res = search(store, qv, qi, sem=iv.Semantics.RF, ef=64, k=10)
     gt = brute_force(x, pts, qv, qi, sem=iv.Semantics.RF, k=10)
     assert recall(res, gt) >= 0.9
 

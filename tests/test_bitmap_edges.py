@@ -15,6 +15,7 @@ from repro.core import intervals as iv
 from repro.core.exact import build_exact
 from repro.core.entry import build_entry_index
 from repro.core.search import _bitmap_set, _bitmap_test, beam_search, brute_force
+from repro.core.store import make_store
 
 
 def test_bitmap_n_not_multiple_of_32():
@@ -63,7 +64,8 @@ def test_no_valid_entry_returns_all_invalid(backend, small_corpus):
     qv = jnp.zeros((3, x.shape[1]))
     entry = jnp.full((3,), -1, jnp.int32)
     qi = jnp.asarray([[-5.0, 5.0]] * 3, jnp.float32)  # IS-impossible window
-    res = beam_search(x, ints, g.nbrs, g.status, entry, qv, qi,
+    store = make_store(x, ints, g.nbrs, g.status)
+    res = beam_search(store, entry, qv, qi,
                       sem=iv.Semantics.IS, ef=16, k=5, backend=backend)
     assert bool((res.ids == -1).all())
     assert bool(jnp.isinf(res.dist).all())
@@ -81,7 +83,8 @@ def test_duplicate_neighbors_within_fused_step(small_corpus):
     qv = jax.random.normal(k1, (16, x.shape[1]))
     c = jax.random.uniform(k2, (16, 1))
     qi = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)], axis=1)
-    res = search(x, ints, g.nbrs, g.status, eidx, qv, qi,
+    store = make_store(x, ints, g.nbrs, g.status, entry=eidx)
+    res = search(store, qv, qi,
                  sem=iv.Semantics.IF, ef=32, k=10, backend="xla", width=8)
     gt = brute_force(x, ints, qv, qi, sem=iv.Semantics.IF, k=10)
     from repro.core.index import recall

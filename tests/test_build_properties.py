@@ -1,9 +1,12 @@
 """Property tests for the construction pipeline's scatter/dedup primitives.
 
-numpy oracles for the two fixed-width building blocks of Alg. 2:
+numpy oracles for the fixed-width building blocks of Alg. 2:
 
-* ``build.scatter_repairs`` — fixed-width truncation keeps the first
-  ``width`` offers per witness *in scan order*; -1 pads never leak;
+* ``kernels.util.segment_scatter`` — THE shared sort-by-segment + rank
+  scatter (``build.scatter_repairs``, ``candidates._reverse_candidates``
+  and the delete-repair in-neighbor sets are all this one helper):
+  fixed-width truncation keeps the first ``width`` values per segment *in
+  scan order*; pairs with a -1 side never leak;
 * ``prune._dedup_sorted_by_distance`` — duplicate candidate ids keep the
   *closest* copy; pads and masked duplicates sort to the back as +inf.
 
@@ -16,7 +19,9 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.build import scatter_repairs
+from repro.core.candidates import _reverse_candidates
 from repro.core.prune import _dedup_sorted_by_distance
+from repro.kernels.util import segment_scatter
 import pytest
 
 pytestmark = pytest.mark.hermetic  # runs in the no-hypothesis CI job
@@ -52,6 +57,38 @@ def dedup_oracle(cand, dist):
 
 
 # ----------------------------------------------------------------- scatter
+@settings(max_examples=40)
+@given(st.integers(min_value=1, max_value=60), st.integers(min_value=1, max_value=9),
+       st.integers(min_value=0, max_value=10_000))
+def test_segment_scatter_matches_oracle(n, width, seed):
+    """The shared helper itself, against the numpy oracle (ISSUE-5
+    satellite) — segment ids and values drawn independently, including
+    out-of-range (>= n is impossible by construction here, -1/-2 pads are
+    not)."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 150))
+    seg = rng.integers(-2, n, size=m).astype(np.int32)
+    val = rng.integers(-2, 5 * n, size=m).astype(np.int32)
+    got = np.asarray(segment_scatter(jnp.asarray(seg), jnp.asarray(val), n, width))
+    want = scatter_oracle(seg, val, n, width)
+    assert got.shape == (n, width)
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=20)
+@given(st.integers(min_value=1, max_value=40), st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=10_000))
+def test_reverse_candidates_via_segment_scatter(n, r_max, seed):
+    """candidates._reverse_candidates == oracle over (dst -> src) pairs."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, 7))
+    ids = rng.integers(-1, n, size=(n, k)).astype(np.int32)
+    got = np.asarray(_reverse_candidates(jnp.asarray(ids), r_max))
+    src = np.broadcast_to(np.arange(n, dtype=np.int32)[:, None], (n, k))
+    want = scatter_oracle(ids.reshape(-1), src.reshape(-1), n, r_max)
+    assert np.array_equal(got, want)
+
+
 @settings(max_examples=40)
 @given(st.integers(min_value=1, max_value=60), st.integers(min_value=1, max_value=9),
        st.integers(min_value=0, max_value=10_000))

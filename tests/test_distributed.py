@@ -43,13 +43,13 @@ ints = np.asarray(iv.sample_uniform_intervals(k2, n))
 cfg = UGConfig(ef_spatial=16, ef_attribute=32, max_edges_if=16, max_edges_is=16,
                iterations=2, repair_width=8, exact_spatial=True, block=512)
 xs, its, nbs, sts, gid = build_sharded_index_host(x, ints, 4, cfg)
-arrs = shard_index(mesh, ("data",), xs, its, nbs, sts, gid)
+sidx = shard_index(mesh, ("data",), xs, its, nbs, sts, gid)
 nq = 16
 qv = jax.random.normal(k3, (nq, d))
 c = jax.random.uniform(k4, (nq, 1))
 qi = jnp.concatenate([jnp.maximum(c-0.3,0), jnp.minimum(c+0.3,1)], axis=1)
 fn = make_sharded_search_fn(mesh, index_axes=("data",), sem=iv.Semantics.IF, ef=48, k=10)
-ids, dist = fn(*arrs, qv, qi)
+ids, dist = fn(sidx, qv, qi)
 gt = brute_force(jnp.asarray(x), jnp.asarray(ints), qv, qi, sem=iv.Semantics.IF, k=10)
 r = recall(SearchResult(ids, dist, None), gt)
 assert r >= 0.9, r
@@ -59,9 +59,9 @@ assert r >= 0.9, r
 fnm = make_sharded_search_fn(mesh, index_axes=("data",), sem=iv.Semantics.IF,
                              ef=48, k=10, mixed=True)
 flags = jnp.asarray([iv.FLAG_IF, iv.FLAG_IS] * (nq // 2), jnp.int32)
-ids_m, dist_m = fnm(*arrs, qv, qi, flags)
+ids_m, dist_m = fnm(sidx, qv, qi, flags)
 fn_is = make_sharded_search_fn(mesh, index_axes=("data",), sem=iv.Semantics.IS, ef=48, k=10)
-ids_is, dist_is = fn_is(*arrs, qv, qi)
+ids_is, dist_is = fn_is(sidx, qv, qi)
 f_np = np.asarray(flags)
 for sel, ref_ids, ref_d in ((f_np == iv.FLAG_IF, ids, dist),
                             (f_np == iv.FLAG_IS, ids_is, dist_is)):

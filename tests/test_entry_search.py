@@ -11,6 +11,7 @@ from repro.core.entry import build_entry_index, get_entry, get_entry_batch
 from repro.core.exact import build_exact
 from repro.core.index import UGIndex, recall
 from repro.core.search import brute_force, search
+from repro.core.store import make_store
 
 pytestmark = pytest.mark.hermetic  # runs in the no-hypothesis CI job
 
@@ -100,8 +101,9 @@ def test_search_exact_graph_full_recall(small_corpus, queries):
     g = build_exact(x, ints, unified=True)
     eidx = build_entry_index(ints)
     qv, qi = queries
+    store = make_store(x, ints, g.nbrs, g.status, entry=eidx)
     for sem in (iv.Semantics.IF, iv.Semantics.IS):
-        res = search(x, ints, g.nbrs, g.status, eidx, qv, qi, sem=sem, ef=48, k=10)
+        res = search(store, qv, qi, sem=sem, ef=48, k=10)
         gt = brute_force(x, ints, qv, qi, sem=sem, k=10)
         assert recall(res, gt) == 1.0, sem
 
@@ -113,11 +115,12 @@ def test_search_no_valid_nodes(small_corpus):
     eidx = build_entry_index(ints)
     qv = jnp.zeros((2, x.shape[1]))
     impossible = jnp.asarray([[0.4999, 0.5001], [0.5, 0.5]], jnp.float32)
-    res = search(x, ints, g.nbrs, g.status, eidx, qv, impossible,
+    store = make_store(x, ints, g.nbrs, g.status, entry=eidx)
+    res = search(store, qv, impossible,
                  sem=iv.Semantics.IS, ef=16, k=5)
     # IS with a near-point query can have matches; use an out-of-range one
     impossible2 = jnp.asarray([[-5.0, 5.0], [-5.0, 5.0]], jnp.float32)
-    res2 = search(x, ints, g.nbrs, g.status, eidx, qv, impossible2,
+    res2 = search(store, qv, impossible2,
                   sem=iv.Semantics.IS, ef=16, k=5)
     assert bool((res2.ids == -1).all())
 

@@ -1,0 +1,90 @@
+"""On-device sharded build parity (DESIGN.md §12, ISSUE-5 acceptance).
+
+Runs in a subprocess with 8 fake CPU devices (device count must be fixed
+before jax initializes — same harness as test_distributed.py).
+
+Asserts, in one subprocess to amortize the interpreter + build cost:
+
+* the on-device ``build_sharded_store`` (ring-KNN bootstrap + shard-local
+  attribute orders + the jitted prune/repair iterations under ``shard_map``)
+  produces a sharded index whose search recall matches the serial host
+  reference ``build_sharded_index_host`` within 0.01 on **all four**
+  semantics (IF / IS / RS on uniform intervals, RF on point intervals);
+* the device path never calls the host per-shard builder (``build_ug`` is
+  stubbed to raise before the device build runs);
+* an ``int8`` + rerank sharded store serves through the same search program
+  within 0.02 recall of the f32 sharded store.
+"""
+from tests.test_distributed import run_sub
+
+
+def test_device_build_matches_host_path():
+    run_sub(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import intervals as iv, brute_force, recall
+from repro.core.build import UGConfig
+from repro.core.search import SearchResult
+from repro.core import sharded as sh
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4, 2), ("data", "model"))
+k1, k2, k3, k4 = jax.random.split(jax.random.key(0), 4)
+n, d = 1200, 12
+x = np.asarray(jax.random.normal(k1, (n, d)))
+ints = np.asarray(iv.sample_uniform_intervals(k2, n))
+pints = np.asarray(iv.sample_point_intervals(jax.random.fold_in(k2, 1), n))
+cfg = UGConfig(ef_spatial=16, ef_attribute=32, max_edges_if=16, max_edges_is=16,
+               iterations=2, repair_width=8, exact_spatial=True, block=512)
+
+nq = 24
+qv = jax.random.normal(k3, (nq, d))
+c = jax.random.uniform(k4, (nq, 1))
+wide = jnp.concatenate([jnp.maximum(c-0.3,0), jnp.minimum(c+0.3,1)], axis=1)
+point = jnp.concatenate([c, c], axis=1)
+
+# host reference path (the serial per-shard build_ug loop)
+host_u = sh.shard_index(mesh, ("data",), *sh.build_sharded_index_host(x, ints, 4, cfg))
+host_p = sh.shard_index(mesh, ("data",), *sh.build_sharded_index_host(x, pints, 4, cfg))
+
+# device path must NEVER fall back to per-shard host builds: stub build_ug
+import repro.core.build as build_mod
+def _forbidden(*a, **k):
+    raise AssertionError("on-device sharded build called host build_ug")
+build_mod.build_ug = _forbidden
+
+dev_u = sh.build_sharded_store(mesh, x, ints, cfg, index_axes=("data",))
+dev_p = sh.build_sharded_store(mesh, x, pints, cfg, index_axes=("data",))
+
+cases = [
+    ("IF", iv.Semantics.IF, ints, wide, host_u, dev_u),
+    ("IS", iv.Semantics.IS, ints, wide, host_u, dev_u),
+    ("RS", iv.Semantics.RS, ints, point, host_u, dev_u),
+    ("RF", iv.Semantics.RF, pints, wide, host_p, dev_p),
+]
+for name, sem, corpus_iv, qint, sidx_h, sidx_d in cases:
+    fn = sh.make_sharded_search_fn(mesh, index_axes=("data",), sem=sem, ef=64, k=10)
+    gt = brute_force(jnp.asarray(x), jnp.asarray(corpus_iv), qv, qint, sem=sem, k=10)
+    r_host = recall(SearchResult(*fn(sidx_h, qv, qint), None), gt)
+    r_dev = recall(SearchResult(*fn(sidx_d, qv, qint), None), gt)
+    print(f"{name}: host {r_host:.3f} device {r_dev:.3f}")
+    assert r_dev >= r_host - 0.01, (name, r_dev, r_host)
+
+# int8 + rerank sharded store: same program family, quantized scan plane
+dev_q8 = sh.build_sharded_store(mesh, x, ints, cfg, index_axes=("data",),
+                                dtype="int8", rerank=True)
+fn = sh.make_sharded_search_fn(mesh, index_axes=("data",), sem=iv.Semantics.IF,
+                               ef=64, k=10)
+fn8 = sh.make_sharded_search_fn(mesh, index_axes=("data",), sem=iv.Semantics.IF,
+                                ef=64, k=10, plane_tag="int8", has_rerank=True)
+gt = brute_force(jnp.asarray(x), jnp.asarray(ints), qv, wide, sem=iv.Semantics.IF, k=10)
+r_f32 = recall(SearchResult(*fn(dev_u, qv, wide), None), gt)
+r_q8 = recall(SearchResult(*fn8(dev_q8, qv, wide), None), gt)
+print(f"int8+rerank: {r_q8:.3f} vs f32 {r_f32:.3f}")
+assert r_q8 >= r_f32 - 0.02, (r_q8, r_f32)
+assert dev_q8.store.plane.data.dtype == jnp.int8
+assert dev_u.store.plane.bytes_per_vector() / dev_q8.store.plane.bytes_per_vector() >= 3.0
+print("sharded device build parity OK")
+""",
+        timeout=1800,
+    )
