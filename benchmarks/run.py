@@ -135,6 +135,9 @@ def main(argv=None) -> None:
         ("memory", lambda: tables.bench_memory(
             **({"n": n} if n else {}),
             require_reduction=3.0 if args.smoke else None)),
+        ("serve", lambda: tables.bench_serve(
+            **({"n": n} if n else {}),
+            require_qps_ratio=0.85 if args.smoke else None)),
         ("kernels", tables.bench_kernels),
         ("lm_steps", tables.bench_lm_steps),
     ]

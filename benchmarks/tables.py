@@ -504,6 +504,208 @@ def bench_memory(n=common.N_DEFAULT, require_reduction=None):
     return rows
 
 
+# ------------------------------------------------------- async serve runtime
+def bench_serve(n=common.N_DEFAULT, nreq=256, batch=64, require_qps_ratio=None):
+    """Async continuous-batching runtime vs the sync batched path
+    (DESIGN.md §13) on a churning mixed IF/IS/RF/RS workload.
+
+    One request stream, served twice from the same initial index: the sync
+    path processes FIFO batches of ``batch`` through ``retrieve_mixed``
+    (blocking per batch), the async path trickles the same requests one at
+    a time through :class:`~repro.serve.runtime.ServeRuntime`.  Halfway
+    through, both paths apply the same churn write (remove + upsert).
+    Functional updates are deterministic, so both paths' post-write
+    snapshots are bitwise-identical — which makes the consistency metrics
+    exact equality checks, not tolerances:
+
+    * ``recall_vs_pinned_snapshot`` — fraction of async replies bitwise-
+      equal to a direct ``search_mixed`` on the snapshot the reply pinned
+      (1.0 == no torn reads); the ``recall`` prefix puts it under the
+      baseline gate's floor;
+    * ``recall_async_eq_sync`` — fraction of requests where async and sync
+      answers agree bitwise (continuous batching is exact);
+    * ``recall_pre``/``recall_post`` — recall@10 of each stream half
+      against its own snapshot's brute-force truth.
+
+    ``require_qps_ratio`` (run.py --smoke) asserts
+    ``qps_async ≥ ratio · qps_sync``.
+    """
+    from repro.core import intervals as iv_mod
+    from repro.core.search import search_mixed
+    from repro.serve import RuntimeConfig, ServeEngine, ServeRuntime
+    from repro.serve.engine import bucket_batch_size
+
+    ef, k = 64, 10
+    x, ints = common.corpus(n)
+    idx0 = common.ug_index(n)
+
+    cycle = [Semantics.IF, Semantics.IS, Semantics.RS, Semantics.RF]
+    sems = [cycle[i % 4] for i in range(nreq)]
+    qv, q_wide = common.queries("uniform", n=n, nq=nreq)
+    _, q_point = common.queries("point", n=n, nq=nreq)
+    is_rs = jnp.asarray([s is Semantics.RS for s in sems])
+    qw = jnp.where(is_rs[:, None], q_point, q_wide)
+
+    b_churn = max(n // 20, 8)
+    rng = np.random.default_rng(77)
+    dels = jnp.asarray(rng.choice(n, size=b_churn, replace=False).astype(np.int32))
+    new_x = jax.random.normal(jax.random.key(4321), (b_churn, x.shape[1]))
+    new_iv = iv_mod.sample_uniform_intervals(jax.random.key(4322), b_churn)
+    mid = (nreq // batch // 2) * batch
+
+    def serve_sync(engine):
+        """FIFO batches, blocking per batch; churn write between batches."""
+        out_ids, out_dist = [], []
+        t0 = time.perf_counter()
+        for s in range(0, nreq, batch):
+            if s == mid:
+                engine.remove(dels)
+                engine.upsert(None, new_iv, x=new_x)
+            res = engine.retrieve_mixed(
+                None, qw[s:s + batch], sems[s:s + batch], ef=ef, k=k,
+                q_v=qv[s:s + batch])
+            out_ids.append(np.asarray(res.ids))   # blocks: sync semantics
+            out_dist.append(np.asarray(res.dist))
+        dt = time.perf_counter() - t0
+        return np.concatenate(out_ids), np.concatenate(out_dist), dt
+
+    # warmup pass on a scratch engine: compiles every program both measured
+    # paths touch, so neither measured pass pays compile time.  The sync
+    # path only ever sees the ``batch`` bucket, but the async coalescer
+    # dequeues whatever run lengths the race with admission produces — warm
+    # every bucket up to ``batch``, on both the pre- and post-churn store
+    # layouts (churn attaches the alive mask, a different program pytree).
+    def warm_buckets(engine):
+        m, top = 1, bucket_batch_size(batch)
+        while True:
+            m = bucket_batch_size(m)
+            engine.retrieve_mixed(None, qw[:m], sems[:m], ef=ef, k=k,
+                                  q_v=qv[:m])
+            if m >= top:
+                break
+            m += 1
+
+    scratch = ServeEngine(None, None)
+    scratch.attach_index(idx0)
+    warm_buckets(scratch)
+    serve_sync(scratch)     # update programs + post-churn batch-bucket search
+    warm_buckets(scratch)   # post-churn layout, remaining buckets
+
+    eng_sync = ServeEngine(None, None)
+    eng_sync.attach_index(idx0)
+    ids_sync, dist_sync, dt_sync = serve_sync(eng_sync)
+    qps_sync = nreq / dt_sync
+
+    eng_async = ServeEngine(None, None)
+    eng_async.attach_index(idx0)
+    # requests arrive as individual vectors; materialize the rows before the
+    # clock starts so both paths time serving, not harness slicing
+    q_rows = [qv[i] for i in range(nreq)]
+    w_rows = [qw[i] for i in range(nreq)]
+    t0 = time.perf_counter()
+    with ServeRuntime(eng_async, RuntimeConfig(max_batch=batch)) as rt:
+        futs, wfuts = [], []
+        for i in range(nreq):
+            if i == mid:
+                wfuts.append(rt.submit_remove(dels))
+                wfuts.append(rt.submit_upsert(new_x, new_iv))
+            futs.append(rt.submit(q_rows[i], w_rows[i], sems[i], ef=ef, k=k,
+                                  deadline=rt.clock() + 300.0))
+        replies = [f.result(timeout=600) for f in futs]
+        stats = rt.stats()
+    dt_async = time.perf_counter() - t0
+    qps_async = nreq / dt_async
+    assert all(w.result(timeout=5) == b_churn for w in wfuts)
+    assert stats["rejected"] == 0 and stats["writes"] == 2
+
+    # --- consistency: every async reply == direct search on its pinned
+    # snapshot, and async == sync per request (both bitwise)
+    pinned_ok = 0
+    by_index: dict[int, list[int]] = {}
+    for i, r in enumerate(replies):
+        by_index.setdefault(id(r.index), []).append(i)
+    snapshots = {id(r.index): r.index for r in replies}
+    for iid, idxs in by_index.items():
+        index = snapshots[iid]
+        sel = jnp.asarray(idxs)
+        B = len(idxs)
+        Bp = bucket_batch_size(B)
+        from repro.core import FLAG_IF, as_sem_flags
+
+        q = qv[sel]
+        w = qw[sel]
+        f = as_sem_flags([sems[i] for i in idxs], B)
+        if Bp != B:
+            pad = Bp - B
+            q = jnp.concatenate([q, jnp.zeros((pad, q.shape[1]), q.dtype)])
+            w = jnp.concatenate(
+                [w, jnp.broadcast_to(jnp.asarray([2.0, -2.0], w.dtype),
+                                     (pad, 2))])
+            f = jnp.concatenate([f, jnp.full((pad,), FLAG_IF, jnp.int32)])
+        ref = search_mixed(index.store, q, w, f, ef=ef, k=k)
+        rids, rdist = np.asarray(ref.ids), np.asarray(ref.dist)
+        for j, i in enumerate(idxs):
+            if (np.array_equal(replies[i].ids, rids[j])
+                    and np.array_equal(replies[i].dist, rdist[j])):
+                pinned_ok += 1
+    frac_pinned = pinned_ok / nreq
+    frac_eq = sum(
+        1 for i, r in enumerate(replies)
+        if np.array_equal(r.ids, ids_sync[i])
+        and np.array_equal(r.dist, dist_sync[i])
+    ) / nreq
+    assert frac_pinned == 1.0, (
+        f"torn read: only {frac_pinned:.3f} of async replies match a direct "
+        f"search on their pinned snapshot")
+    assert frac_eq == 1.0, (
+        f"async/sync divergence: only {frac_eq:.3f} of requests agree")
+
+    # --- recall of each stream half against its own snapshot's truth
+    idx_new = eng_async.index
+    halves = [("pre", idx0, range(0, mid)), ("post", idx_new, range(mid, nreq))]
+    rec = {}
+    for name, index, span in halves:
+        sel = jnp.asarray(list(span))
+        from repro.core.search import SearchResult
+
+        part = SearchResult(
+            jnp.asarray(np.stack([replies[i].ids for i in span])),
+            jnp.asarray(np.stack([replies[i].dist for i in span])),
+            None)
+        hit = 0.0
+        for s in cycle:
+            ssel = [i for i in span if sems[i] is s]
+            if not ssel:
+                continue
+            a = jnp.asarray(ssel)
+            gt = index.ground_truth(qv[a], qw[a], sem=s, k=k)
+            sub = SearchResult(part.ids[a - sel[0]], part.dist[a - sel[0]], None)
+            hit += recall(sub, gt) * len(ssel)
+        rec[name] = hit / len(sel)
+
+    ratio = qps_async / qps_sync
+    rows = [
+        common.row(
+            "serve_sync_batched", 1e6 * dt_sync / nreq,
+            f"qps={qps_sync:.0f} batch={batch} nreq={nreq} churn={b_churn}"),
+        common.row(
+            "serve_async_runtime", 1e6 * dt_async / nreq,
+            f"qps={qps_async:.0f} qps_ratio={ratio:.2f} "
+            f"p50_ms={stats['p50_ms']:.1f} p99_ms={stats['p99_ms']:.1f} "
+            f"rejected={stats['rejected']} writes={stats['writes']}"),
+        common.row(
+            "serve_consistency", 0.0,
+            f"recall_vs_pinned_snapshot={frac_pinned:.3f} "
+            f"recall_async_eq_sync={frac_eq:.3f} "
+            f"recall_pre={rec['pre']:.3f} recall_post={rec['post']:.3f}"),
+    ]
+    if require_qps_ratio is not None:
+        assert ratio >= require_qps_ratio, (
+            f"async runtime sustains only {ratio:.2f}x the sync batched "
+            f"QPS (need >= {require_qps_ratio}x)")
+    return rows
+
+
 # ---------------------------------------------------------------- kernels
 def bench_kernels():
     """Pallas kernels (interpret mode on CPU — relative numbers only) vs jnp."""

@@ -249,6 +249,87 @@ def make_sharded_search_fn(
     return jax.jit(fn)
 
 
+def local_shard_view(sidx: ShardedIndex, s: int, n_shards: int):
+    """Shard ``s``'s row block of a :class:`ShardedIndex` as a standalone
+    ``(IndexStore, global_ids)`` pair.
+
+    Row-sharded leaves partition axis 0 into equal contiguous blocks per
+    shard (that is what ``P((index_axes,))`` means), so shard ``s`` is rows
+    ``[s·per, (s+1)·per)``; replicated leaves (quantization parameters) are
+    shared.  The view is the unit of the straggler probe
+    (:func:`make_shard_probe_fns`): searching it alone reproduces exactly
+    what shard ``s`` computes inside the ``shard_map`` program.
+    """
+    cap = sidx.store.capacity
+    if cap % n_shards:
+        raise ValueError(f"capacity {cap} not divisible by {n_shards} shards")
+    per = cap // n_shards
+    sl = slice(s * per, (s + 1) * per)
+    st = sidx.store
+
+    def cut(pl):
+        if pl is None:
+            return None
+        return VectorPlane(pl.tag, pl.data[sl], pl.scale, pl.zero)
+
+    store = IndexStore(
+        plane=cut(st.plane), rerank=cut(st.rerank),
+        intervals=st.intervals[sl], nbrs=st.nbrs[sl], status=st.status[sl],
+        entry=None,
+    )
+    return store, sidx.global_ids[sl]
+
+
+def make_shard_probe_fns(
+    sidx: ShardedIndex,
+    n_shards: int,
+    *,
+    ef: int = 64,
+    k: int = 10,
+    backend: str | None = None,
+    width: int = 4,
+):
+    """Per-shard local-search callables for straggler probing (DESIGN.md §13).
+
+    Shard ``s``'s callable runs the *same* shard-local program the sharded
+    search step runs inside ``shard_map`` — entry structure over own rows,
+    ``beam_search_flags``, gid mapping — but on shard ``s``'s row block
+    alone, so timing one call isolates that shard's step cost.  The serve
+    runtime's :class:`~repro.serve.runtime.FleetServeMonitor` feeds these
+    timings into :class:`~repro.ft.straggler.FleetMonitor` to turn slow
+    shards into mitigation recommendations and
+    :func:`~repro.ft.elastic.plan_serve_rescale` replica plans.
+
+    All shards share one compiled program (the row blocks are equal-shaped;
+    the shard's arrays are call arguments, not closure constants).  Returns
+    a list of ``fn(q_v, q_int, sem_flags) -> (global_ids, dist)``.
+    """
+    views = [local_shard_view(sidx, s, n_shards) for s in range(n_shards)]
+
+    @jax.jit
+    def probe(store, gids, q_v, q_int, sem_flags):
+        alive = gids >= 0
+        eidx = build_entry_index(store.intervals, node_mask=alive)
+        st = store.replace(entry=eidx, alive=alive)
+        if backend == "legacy":
+            entry = get_entry_flags(eidx, q_int, sem_flags)
+        else:
+            entry = get_entry_batch_flags(eidx, q_int, sem_flags, width=width)
+        res = beam_search_flags(
+            st, entry, q_v, q_int, sem_flags,
+            ef=ef, k=k, backend=backend, width=width,
+        )
+        nloc = store.capacity
+        g = jnp.where(res.ids >= 0, gids[jnp.clip(res.ids, 0, nloc - 1)], -1)
+        return g, res.dist
+
+    def bind(store, gids):
+        return lambda q_v, q_int, sem_flags: probe(
+            store, gids, q_v, q_int, sem_flags)
+
+    return [bind(store, gids) for store, gids in views]
+
+
 # --------------------------------------------------------------------------
 # Ring-streamed exact KNN (distributed candidate bootstrap)
 # --------------------------------------------------------------------------

@@ -48,6 +48,36 @@ def plan_rescale(
     return RescalePlan((data, model_parallel), axis_names[1:], pods - 1 if pods > 1 else 0)
 
 
+def plan_serve_rescale(
+    n_devices: int,
+    shard_parallel: int,
+    *,
+    axis_names: tuple[str, ...] = ("replica", "shard"),
+) -> RescalePlan:
+    """Replica-count planning for a row-sharded serving store (DESIGN.md §13).
+
+    The shard axis plays the role model parallelism plays in training: the
+    index is physically partitioned ``shard_parallel`` ways and re-sharding
+    it means rebuilding per-shard graphs, so the shard degree is preserved
+    and the *replica* (query data-parallel) axis absorbs capacity changes —
+    each replica group holds one full copy of the sharded store and serves
+    an independent slice of the query traffic.  Devices that do not fill a
+    whole replica group are dropped (reported via ``dropped_pods``), exactly
+    how a real incident sheds capacity.
+    """
+    if shard_parallel <= 0 or n_devices <= 0:
+        raise ValueError(
+            f"need positive device/shard counts, got n_devices={n_devices} "
+            f"shard_parallel={shard_parallel}")
+    replicas = n_devices // shard_parallel
+    if replicas == 0:
+        raise ValueError(
+            f"{n_devices} devices cannot hold one {shard_parallel}-shard "
+            f"replica of the store")
+    dropped = n_devices - replicas * shard_parallel
+    return RescalePlan((replicas, shard_parallel), axis_names, dropped)
+
+
 def resume(
     ckpt_dir,
     model,

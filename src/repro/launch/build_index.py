@@ -44,7 +44,11 @@ def main(argv=None) -> int:
                     help="attach the exact f32 rerank plane for final-top-k "
                          "re-scoring (default: on for int8, off otherwise)")
     ap.add_argument("--out", default=None, help="directory to save the index")
-    ap.add_argument("--selftest", action="store_true", default=True)
+    # store_true + default=True made --selftest a no-op (same pattern as the
+    # launch/serve.py --reduced bug); BooleanOptionalAction restores
+    # --no-selftest for build-only runs.
+    ap.add_argument("--selftest", action=argparse.BooleanOptionalAction,
+                    default=True)
     args = ap.parse_args(argv)
 
     ccfg = CorpusConfig(n=args.n, dim=args.dim, seed=args.seed,

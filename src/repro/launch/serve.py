@@ -28,7 +28,11 @@ from repro.serve import ServeEngine
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen1.5-4b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # store_true + default=True made --reduced a no-op (the full-size config
+    # was unreachable); BooleanOptionalAction restores --no-reduced.
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True, help="use the reduced config (--no-reduced "
+                    "serves the full-size architecture)")
     ap.add_argument("--docs", type=int, default=2000)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--doc-len", type=int, default=32)
@@ -50,10 +54,15 @@ def main(argv=None) -> int:
                     help="churn demo: delete 10%% of the corpus and upsert "
                          "replacement docs through the streaming update "
                          "subsystem (DESIGN.md §11), then re-evaluate recall")
+    ap.add_argument("--async", dest="async_serve", action="store_true",
+                    help="async continuous-batching demo: stream the mixed "
+                         "workload through ServeRuntime with per-request "
+                         "deadlines and concurrent churn writes, printing "
+                         "sustained QPS and p50/p99 (DESIGN.md §13)")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
-    cfg = spec.reduced
+    cfg = spec.reduced if args.reduced else spec.config
     if cfg.family == "encdec":
         print("[serve] encdec tower: using decoder-only embedding of tokens")
     model = get_model(cfg)
@@ -193,6 +202,47 @@ def main(argv=None) -> int:
             gt = idx2.ground_truth(qv, qint, sem=sem, k=args.k)
             print(f"[serve] {sem.value} after churn: "
                   f"recall@{args.k} {recall(res, gt):.3f}")
+
+    # 6) async serving: the continuous-batching runtime (DESIGN.md §13) —
+    #    requests trickle in one at a time with their own semantics + a
+    #    deadline, writes churn the corpus mid-stream, and the coalescer
+    #    re-packs everything into bucket-shaped micro-batches for the same
+    #    compiled programs the batched path uses
+    if args.async_serve:
+        from repro.serve import RuntimeConfig, ServeRuntime
+
+        cycle = [Semantics.IF, Semantics.IS, Semantics.RS, Semantics.RF]
+        sems = [cycle[i % 4] for i in range(args.queries)]
+        is_rs = jnp.asarray([s is Semantics.RS for s in sems])
+        qmix = jnp.where(is_rs[:, None], point, wide)
+        n_churn = max(args.docs // 20, 1)
+        new_x = engine.embed(jax.random.randint(
+            jax.random.fold_in(k_doc, 11), (n_churn, args.doc_len), 0,
+            cfg.vocab))
+        new_iv = iv.sample_uniform_intervals(jax.random.fold_in(k_iv, 11),
+                                             n_churn)
+        # warm the bucket programs so the measured stream is compile-free
+        engine.retrieve_mixed(None, qmix[:1], sems[:1], ef=args.ef,
+                              k=args.k, q_v=qv[:1])
+        with ServeRuntime(engine, RuntimeConfig(max_batch=64)) as rt:
+            futs = []
+            wfut = None
+            for i in range(args.queries):
+                # generous deadline: the first mid-stream upsert pays one-off
+                # jit compiles that dwarf steady-state service time
+                futs.append(rt.submit(
+                    qv[i], qmix[i], sems[i], ef=args.ef, k=args.k,
+                    deadline=rt.clock() + 600.0))
+                if i == args.queries // 2:  # churn mid-stream
+                    wfut = rt.submit_upsert(new_x, new_iv)
+            replies = [f.result(timeout=120) for f in futs]
+            s = rt.stats()
+        pre = sum(1 for r in replies if r.index is not engine.index)
+        print(f"[serve] async runtime: {s['completed']} served "
+              f"({s['rejected']} rejected, {wfut.result()} docs upserted "
+              f"mid-stream; {pre} answered pre-write snapshot) "
+              f"QPS {s['qps']:,.1f}  p50 {s['p50_ms']:.1f}ms  "
+              f"p99 {s['p99_ms']:.1f}ms")
     return 0
 
 

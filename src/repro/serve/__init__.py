@@ -1,2 +1,10 @@
-"""Serving: batched decode engine + embedding extraction."""
+"""Serving: batched decode engine + async continuous-batching runtime."""
 from repro.serve.engine import ServeEngine
+from repro.serve.runtime import (
+    DeadlineExceeded,
+    FleetServeMonitor,
+    QueueFull,
+    RuntimeConfig,
+    ServeReply,
+    ServeRuntime,
+)

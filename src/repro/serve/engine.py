@@ -36,11 +36,51 @@ BATCH_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024)
 
 
 def bucket_batch_size(b: int, buckets: Sequence[int] = BATCH_BUCKETS) -> int:
+    if b <= 0:
+        # A zero-row batch must never reach a device program: padding it to
+        # the smallest bucket would dispatch an all-no-op 8-row program.
+        # Callers (`upsert`/`remove`/`retrieve_mixed`, the runtime coalescer)
+        # return early on B == 0 instead.
+        raise ValueError(f"batch size must be positive, got {b}")
     for s in buckets:
         if b <= s:
             return s
     top = buckets[-1]
     return ((b + top - 1) // top) * top
+
+
+def upsert_chunk_plan(
+    n_live: int, total: int, *, floor: int = 64,
+    buckets: Sequence[int] = BATCH_BUCKETS,
+) -> list[int]:
+    """Chunk sizes for one streaming-insert call, from a single liveness sync.
+
+    Nodes of one insert chunk are mutually invisible during candidate
+    acquisition (candidates come from the pre-chunk live set), so chunk ``i``
+    is bounded by half the live count *as of chunk i* — tracked host-side
+    from the one ``n_live`` sync, never re-read from the device.  Each chunk
+    is rounded **down** to a bucket size (or a multiple of the largest
+    bucket) so every chunk of every call lands exactly on a
+    :data:`BATCH_BUCKETS` shape: the compiled-program cache keys on the
+    bucket, and a drifting live count can no longer mint fresh shapes.
+    """
+    if total <= 0:
+        return []
+    top = buckets[-1]
+    sizes: list[int] = []
+    live = max(int(n_live), 0)
+    left = int(total)
+    while left > 0:
+        limit = max(live // 2, floor)
+        if limit >= top:
+            b = (limit // top) * top  # multiple-of-top shapes, like padding
+        else:
+            b = max((s for s in buckets if s <= limit), default=buckets[0])
+        b = min(b, left)
+        sizes.append(b)
+        live += b
+        left -= b
+    return sizes
 
 
 @dataclasses.dataclass
@@ -129,6 +169,13 @@ class ServeEngine:
         qv = jnp.asarray(qv)
         q_int = jnp.asarray(q_int)
         B = qv.shape[0]
+        if B == 0:  # empty batch: no device dispatch (not even a no-op pad)
+            from repro.core.search import SearchResult
+
+            return SearchResult(
+                jnp.zeros((0, k), jnp.int32), jnp.zeros((0, k), jnp.float32),
+                jnp.zeros((0,), jnp.int32), jnp.int32(0),
+            )
         flags = as_sem_flags(sem_flags, B)
         Bp = bucket_batch_size(B)
         if Bp != B:
@@ -164,11 +211,15 @@ class ServeEngine:
         allocate nothing (DESIGN.md §11).  Nodes of one insert batch are
         mutually invisible during candidate acquisition (candidates come
         from the pre-insert live set), so a batch large relative to the
-        live corpus is split into chunks of at most half the current live
-        count — earlier chunks become candidates and offer targets for
-        later ones.  Returns the inserted count (== B).  The engine's index
-        reference is replaced (functional update), so readers of
-        ``self.index`` always see a consistent graph.
+        live corpus is split into chunks bounded by half the live count —
+        earlier chunks become candidates and offer targets for later ones.
+        The whole chunk plan comes from :func:`upsert_chunk_plan` off a
+        *single* liveness sync (``self.index.n`` blocks on the alive mask;
+        re-reading it every chunk both serializes the pipeline and mints
+        drifting chunk shapes that defeat the bucket program cache).
+        Returns the inserted count (== B).  The engine's index reference is
+        replaced (functional update), so readers of ``self.index`` always
+        see a consistent graph.
         """
         if self.index is None:
             raise ValueError("no index attached; call attach_index() first")
@@ -176,12 +227,12 @@ class ServeEngine:
         xv = jnp.atleast_2d(jnp.asarray(xv))
         intervals = jnp.atleast_2d(jnp.asarray(intervals))
         B = xv.shape[0]
+        if B == 0:  # empty batch: no device dispatch (not even a no-op pad)
+            return 0
         s = 0
-        while s < B:
-            limit = max(self.index.n // 2, 64)
-            xc = xv[s : s + limit]
-            ic = intervals[s : s + limit]
-            b = xc.shape[0]
+        for b in upsert_chunk_plan(self.index.n, B):  # ONE liveness sync
+            xc = xv[s : s + b]
+            ic = intervals[s : s + b]
             Bp = bucket_batch_size(b)
             valid = jnp.arange(Bp) < b
             if Bp != b:
@@ -207,6 +258,8 @@ class ServeEngine:
             raise ValueError("no index attached; call attach_index() first")
         ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
         B = ids.shape[0]
+        if B == 0:  # empty batch: no device dispatch (not even a no-op pad)
+            return 0
         Bp = bucket_batch_size(B)
         if Bp != B:
             ids = jnp.concatenate([ids, jnp.full((Bp - B,), -1, jnp.int32)])

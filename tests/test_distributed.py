@@ -193,3 +193,74 @@ assert any("model" in s or "data" in s for s in shardings)
 print("elastic restore OK")
 """
     )
+
+
+def test_serve_fleet_monitor_on_sharded_index():
+    """Straggler probing + elastic replica planning over a real sharded
+    store (DESIGN.md §13): per-shard probe callables reproduce the
+    shard_map-local search (their merged top-k covers the global answer),
+    a degrading shard is flagged, and the degraded replica plan sheds that
+    shard's device group."""
+    run_sub(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import intervals as iv
+from repro.core.build import UGConfig
+from repro.core.sharded import (build_sharded_index_host, shard_index,
+                                make_sharded_search_fn, make_shard_probe_fns)
+from repro.launch.mesh import make_mesh
+from repro.serve import FleetServeMonitor
+from repro.ft.straggler import StragglerConfig
+
+mesh = make_mesh((4, 2), ("data", "model"))
+k1, k2, k3, k4 = jax.random.split(jax.random.key(0), 4)
+n, d, S = 1200, 12, 4
+x = np.asarray(jax.random.normal(k1, (n, d)))
+ints = np.asarray(iv.sample_uniform_intervals(k2, n))
+cfg = UGConfig(ef_spatial=16, ef_attribute=32, max_edges_if=16, max_edges_is=16,
+               iterations=2, repair_width=8, exact_spatial=True, block=512)
+xs, its, nbs, sts, gid = build_sharded_index_host(x, ints, S, cfg)
+sidx = shard_index(mesh, ("data",), xs, its, nbs, sts, gid)
+
+nq, k = 8, 10
+qv = jax.random.normal(k3, (nq, d))
+c = jax.random.uniform(k4, (nq, 1))
+qi = jnp.concatenate([jnp.maximum(c-0.3,0), jnp.minimum(c+0.3,1)], axis=1)
+flags = jnp.asarray([iv.FLAG_IF if i % 2 else iv.FLAG_IS for i in range(nq)],
+                    jnp.int32)
+
+# probe fns run the same per-shard program the shard_map step runs: the
+# union of per-shard top-k must cover the global sharded answer
+probe_fns = make_shard_probe_fns(sidx, S, ef=48, k=k)
+per_shard = [fn(qv, qi, flags) for fn in probe_fns]
+fn_g = make_sharded_search_fn(mesh, index_axes=("data",), sem=iv.Semantics.IF,
+                              ef=48, k=k, mixed=True)
+gids, gdist = fn_g(sidx, qv, qi, flags)
+union_ids = np.concatenate([np.asarray(p[0]) for p in per_shard], axis=1)
+for q in range(nq):
+    got = set(np.asarray(gids)[q].tolist()) - {-1}
+    cover = set(union_ids[q].tolist())
+    assert got <= cover, (q, got - cover)
+
+# fleet health: warm the timers with real probe timings, then shard 2
+# degrades 20x — it must be flagged and the degraded plan must shed its
+# device group while keeping the shard axis intact
+scfg = StragglerConfig()
+fm = FleetServeMonitor(n_shards=S, n_devices=8, cfg=scfg)
+for _ in range(scfg.warmup + scfg.baseline_min + scfg.recent):
+    times = fm.probe(probe_fns, qv, qi, flags)
+    assert len(times) == S and all(t > 0 for t in times)
+base = float(np.median([np.median(t._recent()) for t in fm.fleet.timers]))
+for _ in range(2 * scfg.recent):
+    for s in range(S):
+        fm.record(s, 20.0 * base if s == 2 else base)
+rep = fm.report()
+assert rep["stragglers"] == [2], rep["stragglers"]
+assert rep["recommendations"].get(2) == "checkpoint_now"
+assert rep["plan"].mesh_shape == (2, S)
+assert rep["degraded_plan"] is not None
+assert rep["degraded_plan"].mesh_shape == (1, S)
+assert rep["degraded_plan"].dropped_pods == 2
+print("fleet monitor OK")
+"""
+    )

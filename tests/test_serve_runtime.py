@@ -1,0 +1,327 @@
+"""Async serve-runtime suite (DESIGN.md §13).
+
+The continuous-batching contracts this pins:
+
+* **exactness** — however the coalescer slices the request stream, every
+  reply is bitwise-equal to a direct ``search_mixed`` call on the reply's
+  pinned snapshot (row independence of the fused batch, DESIGN.md §10);
+* **snapshot consistency** — a query admitted before a write answers
+  against the pre-write snapshot, one admitted after against the post-write
+  snapshot, never a torn mix (the writer swaps the index *reference*;
+  readers pin it once at dequeue);
+* **deadlines** — expired requests are answered with
+  :class:`DeadlineExceeded` (at admission or at dequeue), never silently
+  dropped, and they are counted in ``stats()["rejected"]``;
+* **backpressure** — admission past ``max_queue`` raises
+  :class:`QueueFull` synchronously;
+* **single-sync upserts** — ``ServeEngine.upsert`` reads ``index.n``
+  exactly once per call, and every chunk of every call lands on a
+  :data:`~repro.serve.engine.BATCH_BUCKETS` shape.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FLAG_IF, FLAG_IS, Semantics, UGConfig, UGIndex
+from repro.core import intervals as iv
+from repro.core.search import search_mixed
+from repro.serve import (
+    DeadlineExceeded,
+    QueueFull,
+    RuntimeConfig,
+    ServeEngine,
+    ServeRuntime,
+)
+from repro.serve.engine import BATCH_BUCKETS, bucket_batch_size, upsert_chunk_plan
+
+CFG = UGConfig(ef_spatial=16, ef_attribute=32, max_edges_if=12,
+               max_edges_is=12, iterations=2, repair_width=8,
+               exact_spatial=True, block=512)
+
+
+_INDEX_CACHE: dict = {}
+
+
+def small_index(n=300, d=12, seed=5):
+    """Built once per (n, d, seed) and shared: the index is immutable (every
+    update is functional and swaps the engine's *reference*), so engines in
+    different tests can all attach the same snapshot safely."""
+    key = (n, d, seed)
+    if key not in _INDEX_CACHE:
+        k1, k2 = jax.random.split(jax.random.key(seed))
+        x = jax.random.normal(k1, (n, d))
+        ints = iv.sample_uniform_intervals(k2, n)
+        _INDEX_CACHE[key] = UGIndex.build(x, ints, CFG)
+    return _INDEX_CACHE[key]
+
+
+def make_engine(**kw):
+    eng = ServeEngine(None, None)  # no model: q_v/x always precomputed here
+    eng.attach_index(small_index(**kw))
+    return eng
+
+
+def make_queries(nq, d=12, seed=11):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    qv = jax.random.normal(k1, (nq, d))
+    c = jax.random.uniform(k2, (nq, 1))
+    qi = jnp.concatenate([jnp.maximum(c - 0.3, 0), jnp.minimum(c + 0.3, 1)],
+                         axis=1)
+    flags = [FLAG_IF if i % 2 else FLAG_IS for i in range(nq)]
+    return qv, qi, flags
+
+
+class FakeClock:
+    """Injectable monotonic clock for deterministic deadline tests."""
+
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def direct_rows(index, qv, qi, flags, *, ef=64, k=10, sel=None):
+    """Reference answers: one padded search_mixed call per selected row set,
+    exactly the engine's bucket-padding recipe."""
+    idxs = list(range(qv.shape[0])) if sel is None else list(sel)
+    B = len(idxs)
+    q = jnp.stack([qv[i] for i in idxs])
+    w = jnp.stack([qi[i] for i in idxs])
+    f = jnp.asarray([flags[i] for i in idxs], jnp.int32)
+    Bp = bucket_batch_size(B)
+    if Bp != B:
+        pad = Bp - B
+        q = jnp.concatenate([q, jnp.zeros((pad, q.shape[1]), q.dtype)])
+        w = jnp.concatenate(
+            [w, jnp.broadcast_to(jnp.asarray([2.0, -2.0], w.dtype), (pad, 2))])
+        f = jnp.concatenate([f, jnp.full((pad,), FLAG_IF, jnp.int32)])
+    res = search_mixed(index.store, q, w, f, ef=ef, k=k)
+    return np.asarray(res.ids)[:B], np.asarray(res.dist)[:B]
+
+
+# ---------------------------------------------------------------- exactness
+def test_inline_coalesced_results_match_direct_search():
+    eng = make_engine()
+    rt = ServeRuntime(eng)
+    qv, qi, flags = make_queries(13)  # odd count: forces pad rows
+    futs = [rt.submit(qv[i], qi[i], flags[i]) for i in range(13)]
+    assert rt.run_until_idle() >= 1
+    ids, dist = direct_rows(eng.index, qv, qi, flags)
+    for i, f in enumerate(futs):
+        rep = f.result(timeout=5)
+        assert np.array_equal(rep.ids, ids[i])
+        assert np.array_equal(rep.dist, dist[i])
+        assert rep.index is eng.index
+    assert rt.stats()["completed"] == 13
+
+
+def test_mixed_compile_keys_split_into_exact_micro_batches():
+    """Alternating (ef, k) breaks the stream into many tiny micro-batches;
+    every reply must still equal the direct call on its own key."""
+    eng = make_engine()
+    rt = ServeRuntime(eng)
+    qv, qi, flags = make_queries(12)
+    keys = [(32, 5), (64, 10)]
+    futs = [rt.submit(qv[i], qi[i], flags[i], ef=keys[i % 2][0],
+                      k=keys[i % 2][1]) for i in range(12)]
+    rt.run_until_idle()
+    for (ef, k) in keys:
+        sel = [i for i in range(12) if (keys[i % 2]) == (ef, k)]
+        ids, dist = direct_rows(eng.index, qv, qi, flags, ef=ef, k=k, sel=sel)
+        for j, i in enumerate(sel):
+            rep = futs[i].result(timeout=5)
+            assert rep.ids.shape == (k,)
+            assert np.array_equal(rep.ids, ids[j])
+            assert np.array_equal(rep.dist, dist[j])
+
+
+def test_threaded_runtime_matches_direct_search():
+    eng = make_engine()
+    qv, qi, flags = make_queries(24)
+    with ServeRuntime(eng, RuntimeConfig(max_batch=8)) as rt:
+        futs = [rt.submit(qv[i], qi[i], flags[i]) for i in range(24)]
+        reps = [f.result(timeout=30) for f in futs]
+    ids, dist = direct_rows(eng.index, qv, qi, flags)
+    for i, rep in enumerate(reps):
+        assert np.array_equal(rep.ids, ids[i])
+        assert np.array_equal(rep.dist, dist[i])
+    s = rt.stats()
+    assert s["completed"] == 24 and s["rejected"] == 0
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+
+
+# ----------------------------------------------------- snapshot consistency
+def test_no_torn_reads_across_a_write():
+    """FIFO contract: queries before the remove answer the old snapshot,
+    queries after answer the new one — each bitwise-equal to a direct
+    search on the snapshot its reply pinned."""
+    eng = make_engine()
+    old_index = eng.index
+    qv, qi, flags = make_queries(8)
+    rt = ServeRuntime(eng)
+    pre = [rt.submit(qv[i], qi[i], flags[i]) for i in range(8)]
+    victim_ids = np.unique(np.concatenate(
+        [direct_rows(old_index, qv, qi, flags)[0].ravel()]))
+    victim_ids = victim_ids[victim_ids >= 0][:12]
+    wfut = rt.submit_remove(jnp.asarray(victim_ids, jnp.int32))
+    post = [rt.submit(qv[i], qi[i], flags[i]) for i in range(8)]
+    rt.run_until_idle()
+
+    assert wfut.result(timeout=5) == len(victim_ids)
+    new_index = eng.index
+    assert new_index is not old_index
+
+    ids_old, dist_old = direct_rows(old_index, qv, qi, flags)
+    ids_new, dist_new = direct_rows(new_index, qv, qi, flags)
+    for i in range(8):
+        a, b = pre[i].result(timeout=5), post[i].result(timeout=5)
+        assert a.index is old_index and b.index is new_index
+        assert np.array_equal(a.ids, ids_old[i])
+        assert np.array_equal(a.dist, dist_old[i])
+        assert np.array_equal(b.ids, ids_new[i])
+        assert np.array_equal(b.dist, dist_new[i])
+    # tombstoned docs never surface post-write
+    gone = set(victim_ids.tolist())
+    for i in range(8):
+        assert not gone & set(post[i].result().ids.tolist())
+    assert rt.stats()["writes"] == 1
+
+
+def test_upsert_through_runtime_is_visible_to_later_queries():
+    eng = make_engine(n=256)
+    old_index = eng.index
+    rt = ServeRuntime(eng)
+    k1 = jax.random.key(99)
+    xnew = jax.random.normal(k1, (16, 12))
+    inew = jnp.broadcast_to(jnp.asarray([0.0, 1.0]), (16, 2))
+    qv, qi, flags = make_queries(4)
+    pre = [rt.submit(qv[i], qi[i], flags[i]) for i in range(4)]
+    wfut = rt.submit_upsert(xnew, inew)
+    post = [rt.submit(qv[i], qi[i], flags[i]) for i in range(4)]
+    rt.run_until_idle()
+    assert wfut.result(timeout=5) == 16
+    assert eng.index is not old_index and eng.index.n == 256 + 16
+    for i in range(4):
+        assert pre[i].result().index is old_index
+        assert post[i].result().index is eng.index
+
+
+# ------------------------------------------------------ deadlines + bounds
+def test_deadline_expired_at_admission_is_rejected():
+    eng = make_engine()
+    clk = FakeClock()
+    rt = ServeRuntime(eng, clock=clk)
+    qv, qi, flags = make_queries(1)
+    fut = rt.submit(qv[0], qi[0], flags[0], deadline=clk() - 0.1)
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=1)
+    assert rt.stats()["rejected"] == 1
+    assert rt.run_until_idle() == 0  # nothing was enqueued
+
+
+def test_deadline_expired_in_queue_is_rejected_not_dropped():
+    eng = make_engine()
+    clk = FakeClock()
+    rt = ServeRuntime(eng, clock=clk)
+    qv, qi, flags = make_queries(3)
+    doomed = rt.submit(qv[0], qi[0], flags[0], deadline=clk() + 1.0)
+    alive = [rt.submit(qv[i], qi[i], flags[i], deadline=clk() + 100.0)
+             for i in (1, 2)]
+    clk.advance(5.0)  # both queued; only the first expires
+    rt.run_until_idle()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=1)
+    ids, dist = direct_rows(eng.index, qv, qi, flags, sel=[1, 2])
+    for j, f in enumerate(alive):
+        assert np.array_equal(f.result(timeout=5).ids, ids[j])
+    s = rt.stats()
+    assert s["rejected"] == 1 and s["completed"] == 2
+
+
+def test_admission_bound_raises_queue_full():
+    eng = make_engine()
+    rt = ServeRuntime(eng, RuntimeConfig(max_queue=2))
+    qv, qi, flags = make_queries(3)
+    rt.submit(qv[0], qi[0], flags[0])
+    rt.submit(qv[1], qi[1], flags[1])
+    with pytest.raises(QueueFull):
+        rt.submit(qv[2], qi[2], flags[2])
+    rt.run_until_idle()  # the two admitted requests still complete
+    assert rt.stats()["completed"] == 2
+
+
+def test_runtime_requires_an_attached_index():
+    with pytest.raises(ValueError):
+        ServeRuntime(ServeEngine(None, None))
+
+
+# -------------------------------------------------- empty batches + chunks
+def test_empty_batches_never_dispatch():
+    eng = make_engine()
+    assert eng.remove(jnp.zeros((0,), jnp.int32)) == 0
+    assert eng.upsert(None, jnp.zeros((0, 2)), x=jnp.zeros((0, 12))) == 0
+    res = eng.retrieve_mixed(None, jnp.zeros((0, 2)), [], k=7,
+                             q_v=jnp.zeros((0, 12)))
+    assert res.ids.shape == (0, 7) and res.dist.shape == (0, 7)
+    with pytest.raises(ValueError):
+        bucket_batch_size(0)
+    with pytest.raises(ValueError):
+        bucket_batch_size(-3)
+
+
+def test_upsert_chunk_plan_shapes_and_coverage():
+    for n_live, total in [(300, 16), (300, 500), (64, 1000), (10_000, 3000),
+                          (0, 64), (5, 1)]:
+        plan = upsert_chunk_plan(n_live, total)
+        assert sum(plan) == total
+        top = BATCH_BUCKETS[-1]
+        for i, b in enumerate(plan[:-1]):  # the tail chunk may be a remnant
+            assert b in BATCH_BUCKETS or b % top == 0, (n_live, total, plan)
+        # chunk i never exceeds half the live count as of chunk i (floor 64)
+        live = n_live
+        for b in plan:
+            assert b <= max(live // 2, 64)
+            live += b
+    assert upsert_chunk_plan(300, 0) == []
+
+
+def test_upsert_reads_liveness_exactly_once(monkeypatch):
+    eng = make_engine(n=256)
+    calls = {"n": 0}
+    orig = UGIndex.n.fget
+
+    def counting_n(self):
+        calls["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(UGIndex, "n", property(counting_n))
+    x = jax.random.normal(jax.random.key(3), (700, 12))
+    ints = jnp.broadcast_to(jnp.asarray([0.0, 1.0]), (700, 2))
+    assert eng.upsert(None, ints, x=x) == 700  # multiple chunks, one sync
+    assert calls["n"] == 1
+
+
+def test_runtime_writer_reuses_engine_chunk_plan(monkeypatch):
+    """The runtime's writer path goes through ServeEngine.upsert and so
+    inherits the single-sync chunk plan."""
+    eng = make_engine(n=256)
+    calls = {"n": 0}
+    orig = UGIndex.n.fget
+
+    def counting_n(self):
+        calls["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(UGIndex, "n", property(counting_n))
+    rt = ServeRuntime(eng)
+    x = jax.random.normal(jax.random.key(4), (400, 12))
+    ints = jnp.broadcast_to(jnp.asarray([0.0, 1.0]), (400, 2))
+    fut = rt.submit_upsert(x, ints)
+    rt.run_until_idle()
+    assert fut.result(timeout=5) == 400
+    assert calls["n"] == 1

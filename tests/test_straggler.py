@@ -1,0 +1,107 @@
+"""Straggler-detection + elastic replica-planning unit tests (DESIGN.md §13).
+
+The ISSUE-6 StepTimer bug: the baseline froze on the first 8 recorded
+steps, which include jit compile time — an inflated baseline meant real
+stragglers were never flagged.  These suites pin the fixed behavior:
+warmup records are discarded, the baseline seeds from clean samples and
+then tracks slowly, sudden sustained slowdowns flag, gradual degradation
+trips the checkpoint advice, and benign slow drift does neither.
+
+Pure python (no jax) — runs in the hermetic job too.
+"""
+import pytest
+
+from repro.ft.elastic import plan_serve_rescale
+from repro.ft.straggler import FleetMonitor, StepTimer, StragglerConfig
+
+pytestmark = pytest.mark.hermetic
+
+CFG = StragglerConfig()
+
+
+def feed(timer, xs):
+    for x in xs:
+        timer.record(x)
+
+
+def test_compile_spike_does_not_inflate_baseline():
+    t = StepTimer(CFG)
+    # 4 compile-spike steps (the seed bug folded these into the baseline),
+    # then steady state
+    feed(t, [5.0, 5.0, 4.0, 3.0])
+    feed(t, [0.1] * 20)
+    assert t.baseline == pytest.approx(0.1, rel=0.2)
+    assert not t.is_straggling()
+    assert t.recommendation() is None
+    # a real sustained 5x slowdown must now flag (with the frozen inflated
+    # baseline of the seed code, 0.5s steps sat *below* baseline forever)
+    feed(t, [0.5] * 8)
+    assert t.is_straggling()
+    assert t.recommendation() is not None
+
+
+def test_warmup_records_never_enter_window():
+    t = StepTimer(CFG)
+    feed(t, [100.0] * CFG.warmup)
+    assert len(t.times) == 0 and t.baseline is None
+    feed(t, [1.0] * CFG.baseline_min)
+    assert t.baseline == pytest.approx(1.0)
+
+
+def test_gradual_degradation_trips_checkpoint_advice():
+    t = StepTimer(CFG)
+    feed(t, [1.0] * (CFG.warmup + CFG.baseline_min))
+    # 3x degradation over 60 steps: the slow EMA baseline lags far enough
+    # behind that the trend check fires
+    feed(t, [1.0 + 2.0 * i / 60 for i in range(1, 61)])
+    assert t.recommendation() == "checkpoint_now"
+
+
+def test_slow_benign_drift_stays_quiet():
+    t = StepTimer(CFG)
+    feed(t, [1.0] * (CFG.warmup + CFG.baseline_min))
+    # +20% over 300 steps: the baseline tracks it; neither check may fire
+    feed(t, [1.0 + 0.2 * i / 300 for i in range(1, 301)])
+    assert not t.is_straggling()
+    assert t.recommendation() is None
+
+
+def test_fleet_monitor_flags_the_slow_worker():
+    fm = FleetMonitor(4, CFG)
+    # healthy fleet, then worker 2 degrades 20x (dying NIC, hot neighbor …)
+    for step in range(24):
+        for w in range(4):
+            fm.record(w, 0.1)
+    for step in range(12):
+        for w in range(4):
+            fm.record(w, 2.0 if w == 2 else 0.1)
+    assert fm.stragglers() == [2]
+    # the degraded worker's own timer also notices (fleet-relative and
+    # self-relative detection agree on a degradation)
+    assert 2 in fm.recommendations()
+
+
+def test_fleet_monitor_uniform_fleet_is_clean():
+    fm = FleetMonitor(4, CFG)
+    for step in range(24):
+        for w in range(4):
+            fm.record(w, 0.1 + 0.001 * w)  # benign per-host jitter
+    assert fm.stragglers() == []
+
+
+def test_plan_serve_rescale_preserves_shard_axis():
+    p = plan_serve_rescale(8, 4)
+    assert p.mesh_shape == (2, 4) and p.axis_names == ("replica", "shard")
+    assert p.dropped_pods == 0
+    # lost a device: the partial replica group is shed
+    p = plan_serve_rescale(7, 4)
+    assert p.mesh_shape == (1, 4) and p.dropped_pods == 3
+
+
+def test_plan_serve_rescale_rejects_impossible_fleets():
+    with pytest.raises(ValueError):
+        plan_serve_rescale(3, 4)  # can't hold one full replica
+    with pytest.raises(ValueError):
+        plan_serve_rescale(0, 4)
+    with pytest.raises(ValueError):
+        plan_serve_rescale(8, 0)
