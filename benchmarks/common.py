@@ -8,6 +8,7 @@ orderings are the reproduction target, not absolute C++ QPS.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 
@@ -38,9 +39,15 @@ def queries(workload: str = "uniform", n: int = N_DEFAULT, dim: int = DIM, nq: i
     return make_queries(CorpusConfig(n=n, dim=dim), nq, workload=workload)
 
 
+EXACT_SPATIAL_CUTOFF = 8192   # above this the n^2 exact pass is dropped
+
+
 @functools.lru_cache(maxsize=8)
-def ug_index(n: int = N_DEFAULT, dim: int = DIM, cfg: UGConfig = UG_CFG) -> UGIndex:
+def ug_index(n: int = N_DEFAULT, dim: int = DIM, cfg: UGConfig | None = None) -> UGIndex:
     x, ints = corpus(n, dim)
+    if cfg is None:
+        cfg = UG_CFG if n <= EXACT_SPATIAL_CUTOFF else dataclasses.replace(
+            UG_CFG, exact_spatial=False)   # large-n (run.py --n) path
     return UGIndex.build(x, ints, cfg)
 
 

@@ -100,6 +100,12 @@ def main(argv=None) -> None:
                     help="tiny corpora for CI regression output (implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench-name prefixes")
+    ap.add_argument("--n", type=int, default=None, dest="n_override",
+                    help="override the corpus size for every n-parameterized "
+                         "bench (e.g. --n 1000000 --only memory,build pushes "
+                         "the plane-frontier and build tables to large n; "
+                         "builds above the exact-spatial cutoff go through "
+                         "the on-device sharded path)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH as a JSON artifact")
     ap.add_argument("--check", default=None, metavar="BASELINE",
@@ -115,6 +121,9 @@ def main(argv=None) -> None:
         args.quick = True
     n = (600 if args.smoke else 2000) if args.quick else None
     build_sizes = (400,) if args.smoke else ((800, 1600) if args.quick else (1000, 2000, 4000))
+    if args.n_override:
+        n = args.n_override
+        build_sizes = (args.n_override,)
     benches = [
         ("ifann", lambda: tables.bench_ifann(**({"n": n} if n else {}))),
         ("query_types", lambda: tables.bench_query_types(**({"n": n} if n else {}))),

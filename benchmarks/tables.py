@@ -353,6 +353,26 @@ def bench_build(sizes=(1000, 2000, 4000), backends=("legacy", "xla", "pallas")):
                 f"seconds={dt:.1f} edges={int((np.asarray(graph.nbrs) >= 0).sum())} "
                 f"graph_checksum={checksum} "
                 f"peak_sweep_bytes={profiles[backend]['peak_bytes']}"))
+    # On-device sharded build (DESIGN.md §12): the large-n path
+    # (run.py --n 1e6+) — every shard's graph constructed by one shard_map
+    # program.  Timed over all local devices at the largest requested size.
+    from jax.sharding import Mesh
+
+    from repro.core.sharded import build_sharded_store
+
+    n_sh = max(sizes)
+    devs = np.asarray(jax.devices())
+    x, ints = common.corpus(n_sh)
+    mesh = Mesh(devs, ("data",))
+    dt, sidx = common.timed(
+        lambda: build_sharded_store(
+            mesh, np.asarray(x), np.asarray(ints), cfg_base, dtype="pq"),
+        warmup=0, iters=1,
+    )
+    rows.append(common.row(
+        f"build_sharded_n{n_sh}", dt * 1e6,
+        f"seconds={dt:.1f} shards={len(devs)} "
+        f"rows={int(sidx.global_ids.shape[0])} dtype=pq"))
     return rows
 
 
@@ -455,16 +475,21 @@ def bench_updates(n=common.N_DEFAULT, churn=0.1, require_recall_gap=None):
 
 
 # ------------------------------------------------- vector-plane memory tiers
-def bench_memory(n=common.N_DEFAULT, require_reduction=None):
-    """Bytes/vector + recall per vector plane (DESIGN.md §12).
+def bench_memory(n=common.N_DEFAULT, require_reduction=None,
+                 require_pq_reduction=8.0):
+    """Bytes/vector vs recall vs QPS per vector plane (DESIGN.md §12/§14).
 
-    One graph, four stores: the f32 scan plane, its bf16 and int8
-    re-encodings, and int8 + the exact f32 rerank plane.  Recall is always
-    measured against the *f32* brute-force truth on the shared graph, so
-    the table reads directly as "what does each memory tier cost in
-    answer quality".  ``require_reduction`` (used by ``run.py --smoke``)
-    asserts the ISSUE-5 acceptance pair: int8 scan bytes/vector ≥ that
-    factor below f32 AND int8+rerank recall within 0.02 of f32.
+    One graph, six stores: the f32 scan plane, its bf16 / int8 / pq
+    re-encodings, and int8/pq + the exact f32 rerank plane.  Recall is
+    always measured against the *f32* brute-force truth on the shared
+    graph, so the table reads directly as the bytes/vec-vs-recall-vs-QPS
+    frontier.  Reported plane bytes amortize over *live* rows (codebook /
+    qparam overhead included, so the pq figure converges to ``d/8`` as n
+    grows).  ``require_reduction`` (run.py --smoke) asserts the ISSUE-5
+    acceptance pair (int8 scan bytes ≥ that factor below f32, int8+rerank
+    recall within 0.02 of f32); ``require_pq_reduction`` asserts the
+    ISSUE-7 pair: pq *codes* ≥ 8x below f32 rows AND pq+rerank recall
+    within 0.05 of f32.
     """
     rows = []
     ug = common.ug_index(n)
@@ -475,6 +500,8 @@ def bench_memory(n=common.N_DEFAULT, require_reduction=None):
         ("bf16", ug.with_dtype("bf16")),
         ("int8", ug.with_dtype("int8", rerank=False)),
         ("int8_rerank", ug.with_dtype("int8", rerank=True)),
+        ("pq", ug.with_dtype("pq", rerank=False)),
+        ("pq_rerank", ug.with_dtype("pq", rerank=True)),
     ]
     recalls = {}
     plane_b = {}
@@ -483,24 +510,37 @@ def bench_memory(n=common.N_DEFAULT, require_reduction=None):
             lambda idx=idx: idx.search(qv, qi, sem=Semantics.IF, ef=96, k=10))
         r = recall(res, gt)
         recalls[tag] = r
-        plane_b[tag] = idx.store.plane.bytes_per_vector()
+        plane_b[tag] = idx.store.plane.bytes_per_vector(idx.n)
         rr = idx.store.rerank
         rows.append(common.row(
             f"memory_{tag}", 1e6 * dt / qv.shape[0],
             f"recall={r:.3f} plane_bytes={plane_b[tag]:.0f} "
-            f"rerank_bytes={0 if rr is None else rr.bytes_per_vector():.0f} "
+            f"rerank_bytes={0 if rr is None else rr.bytes_per_vector(idx.n):.0f} "
             f"qps={qv.shape[0]/dt:.0f}"))
     reduction = plane_b["f32"] / plane_b["int8_rerank"]
     gap = recalls["f32"] - recalls["int8_rerank"]
+    pq_plane = variants[-1][1].store.plane
+    pq_codes = pq_plane.data.shape[0] * pq_plane.data.shape[1]
+    pq_code_red = (plane_b["f32"] * n) / pq_codes    # codes only, no overhead
+    pq_gap = recalls["f32"] - recalls["pq_rerank"]
     rows.append(common.row(
         "memory_summary", 0.0,
-        f"int8_scan_reduction={reduction:.2f} int8_rerank_recall_gap={gap:+.3f}"))
+        f"int8_scan_reduction={reduction:.2f} "
+        f"int8_rerank_recall_gap={gap:+.3f} "
+        f"pq_code_reduction={pq_code_red:.2f} "
+        f"pq_rerank_recall_gap={pq_gap:+.3f}"))
     if require_reduction is not None:
         assert reduction >= require_reduction, (
             f"int8 scan plane only {reduction:.2f}x below f32 bytes/vector "
             f"(need >= {require_reduction}x)")
         assert gap <= 0.02, (
             f"int8+rerank trails f32 recall by {gap:.3f} (allowed 0.02)")
+    if require_pq_reduction is not None:
+        assert pq_code_red >= require_pq_reduction, (
+            f"pq codes only {pq_code_red:.2f}x below f32 rows "
+            f"(need >= {require_pq_reduction}x)")
+        assert pq_gap <= 0.05, (
+            f"pq+rerank trails f32 recall by {pq_gap:.3f} (allowed 0.05)")
     return rows
 
 

@@ -175,6 +175,8 @@ def save_index(ckpt_dir: str | pathlib.Path, step: int, index) -> pathlib.Path:
     if st.plane.scale is not None:
         arrays["x_scale"] = st.plane.scale
         arrays["x_zero"] = st.plane.zero
+    if st.plane.codebooks is not None:
+        arrays["x_codebooks"] = st.plane.codebooks
     if st.rerank is not None:
         arrays["rerank"] = st.rerank.data
     streaming = st.alive is not None
@@ -235,6 +237,7 @@ def restore_index(ckpt_dir: str | pathlib.Path, step: int | None = None):
         tag, x_arr,
         arr("x_scale") if "params/x_scale" in keys else None,
         arr("x_zero") if "params/x_zero" in keys else None,
+        arr("x_codebooks") if "params/x_codebooks" in keys else None,
     )
     rerank = (
         VectorPlane("f32", arr("rerank"))

@@ -76,7 +76,7 @@ class UGIndex:
 
     @property
     def dtype(self) -> str:
-        """Scan-plane tag: ``f32`` | ``bf16`` | ``int8``."""
+        """Scan-plane tag: ``f32`` | ``bf16`` | ``int8`` | ``pq``."""
         return self.store.plane.tag
 
     def with_store(self, store: IndexStore) -> "UGIndex":
@@ -100,7 +100,7 @@ class UGIndex:
         The graph is always constructed from the f32 vectors; ``dtype``
         selects the *scan plane* the serving path scores against, and
         ``rerank`` attaches the exact f32 plane for final-top-k re-scoring
-        (default: on for ``int8``, off otherwise)."""
+        (default: on for ``int8``/``pq``, off otherwise)."""
         x = jnp.asarray(x)
         intervals = jnp.asarray(intervals)
         t0 = time.perf_counter()
@@ -108,7 +108,7 @@ class UGIndex:
         jax.block_until_ready(graph.nbrs)
         dt = time.perf_counter() - t0
         if rerank is None:
-            rerank = dtype == "int8"
+            rerank = dtype in ("int8", "pq")
         store = make_store(
             x, intervals, graph.nbrs, graph.status, dtype=dtype, rerank=rerank,
         )
@@ -119,7 +119,7 @@ class UGIndex:
         cross-dtype parity harness — search quality of a ``bf16``/``int8``
         plane is measured against the f32 plane *on the identical graph*."""
         if rerank is None:
-            rerank = dtype == "int8"
+            rerank = dtype in ("int8", "pq")
         x = self.store.vectors_f32()
         store = self.store.replace(
             plane=VectorPlane.encode(x, dtype),
@@ -217,12 +217,15 @@ class UGIndex:
         return int(m["graph"] + m["entry"] + m["masks"])
 
     def vector_memory_bytes(self) -> dict:
-        """Per-plane vector bytes (scan plane, rerank plane, per-vector)."""
+        """Per-plane vector bytes (scan plane, rerank plane, per-vector).
+
+        Bytes/vec amortizes over the *live* count, not capacity — after
+        ``grow()`` doubles capacity the figure must not silently halve."""
         m = self.store.memory_bytes()
         return {
             "plane": m["plane"],
             "rerank": m["rerank"],
-            "plane_bytes_per_vector": self.store.plane.bytes_per_vector(),
+            "plane_bytes_per_vector": self.store.plane.bytes_per_vector(self.n),
         }
 
     def degree_stats(self) -> dict:
@@ -261,6 +264,8 @@ class UGIndex:
         if st.plane.scale is not None:
             arrays["x_scale"] = np.asarray(st.plane.scale)
             arrays["x_zero"] = np.asarray(st.plane.zero)
+        if st.plane.codebooks is not None:
+            arrays["x_codebooks"] = np.asarray(st.plane.codebooks)
         if st.rerank is not None:
             arrays["rerank"] = np.asarray(st.rerank.data)
         if st.alive is not None:
@@ -293,6 +298,8 @@ class UGIndex:
             tag, jnp.asarray(x_np),
             jnp.asarray(blob["x_scale"]) if "x_scale" in blob.files else None,
             jnp.asarray(blob["x_zero"]) if "x_zero" in blob.files else None,
+            jnp.asarray(blob["x_codebooks"])
+            if "x_codebooks" in blob.files else None,
         )
         rerank = (
             VectorPlane("f32", jnp.asarray(blob["rerank"]))

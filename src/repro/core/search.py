@@ -212,12 +212,17 @@ def _make_fused_step(
     # profile reuses the xla merge network.
     merge_backend = "xla" if backend == "legacy" else backend
     dedup = dedup_first_quadratic if backend == "legacy" else dedup_first
+    # PQ plane: the per-query (m, 256) distance tables are built HERE — once
+    # per batch, before the while_loop traces — so every fused step reuses
+    # one loop-invariant LUT instead of rebuilding it per step (None for
+    # non-pq planes).
+    lut = ops.pq_lut(plane, q32)
 
     def score(ids_c, valid):
         """Squared distances of the masked candidate ids via the
         expand-score kernel on the store's plane (+inf where invalid)."""
         return ops.expand_score_plane(
-            plane, jnp.where(valid, ids_c, -1), q32, backend=backend
+            plane, jnp.where(valid, ids_c, -1), q32, backend=backend, lut=lut
         )
 
     def predicate(obj_int):
@@ -562,15 +567,19 @@ def search_step_memory_profile(
 ) -> dict:
     """Trace one fused search step and report its intermediate profile.
 
-    Returns ``{"peak_bytes", "gather_bcd", "quadratic_cc"}`` — whether any
-    ``(B, C, d)`` candidate gather or ``(·, C, C)`` dedup tensor is
-    materialized.  The new path (``xla``/``pallas``) must show neither; the
-    ``legacy`` expand/dedup baseline shows both (the ISSUE-3 acceptance
+    Returns ``{"peak_bytes", "gather_bcd", "quadratic_cc", "decoded_nd"}`` —
+    whether any ``(B, C, d)`` candidate gather, ``(·, C, C)`` dedup tensor,
+    or decoded ``(n, d)`` f32 corpus is materialized.  The new path
+    (``xla``/``pallas``) must show none of them; the ``legacy``
+    expand/dedup baseline shows the first two (the ISSUE-3 acceptance
     check, mirroring PR 2's ``sweep_memory_profile``).  ``dtype`` selects
     the vector plane: the quantized kernels carry the identical guarantee
-    (DESIGN.md §12), which this profile certifies for ``int8`` too.
+    (DESIGN.md §12), which this profile certifies for ``int8`` too, and the
+    ``pq`` LUT kernels additionally certify that scoring never decodes the
+    corpus (``decoded_nd`` — only the legacy pq baseline does, DESIGN.md
+    §14).
     """
-    from repro.core.store import VectorPlane
+    from repro.core.store import VectorPlane, default_pq_m, PQ_K
     from repro.kernels.prune_sweep import _iter_eqn_avals
 
     C = max(min(width, ef), 1) * M
@@ -590,6 +599,12 @@ def search_step_memory_profile(
         plane_sds = VectorPlane(
             "int8", jax.ShapeDtypeStruct((n, d), jnp.int8),
             jax.ShapeDtypeStruct((d,), f32), jax.ShapeDtypeStruct((d,), f32),
+        )
+    elif dtype == "pq":
+        m = default_pq_m(d)
+        plane_sds = VectorPlane(
+            "pq", jax.ShapeDtypeStruct((n, m), jnp.uint8),
+            codebooks=jax.ShapeDtypeStruct((m, PQ_K, d // m), f32),
         )
     else:
         plane_dt = {"f32": jnp.float32, "bf16": jnp.bfloat16}[dtype]
@@ -611,6 +626,7 @@ def search_step_memory_profile(
     peak = 0
     gather_bcd = False
     quadratic = False
+    decoded_nd = False
     for aval in _iter_eqn_avals(closed.jaxpr):
         size = int(aval.size) * aval.dtype.itemsize if aval.shape else aval.dtype.itemsize
         peak = max(peak, size)
@@ -618,7 +634,15 @@ def search_step_memory_profile(
             gather_bcd = True
         if len(aval.shape) >= 2 and aval.shape[-2:] == (C, C):
             quadratic = True
-    return {"peak_bytes": peak, "gather_bcd": gather_bcd, "quadratic_cc": quadratic}
+        if len(aval.shape) >= 2 and aval.shape[-2:] == (n, d) \
+                and aval.dtype == jnp.float32:
+            decoded_nd = True
+    return {
+        "peak_bytes": peak,
+        "gather_bcd": gather_bcd,
+        "quadratic_cc": quadratic,
+        "decoded_nd": decoded_nd,
+    }
 
 
 # ----------------------------------------------------------------- exact

@@ -32,6 +32,7 @@ serial host reference the parity tests compare against.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Sequence
 
 import jax
@@ -45,7 +46,9 @@ from repro.core.candidates import attribute_candidates, merge_topk
 from repro.core.entry import build_entry_index, get_entry_batch_flags, get_entry_flags
 from repro.core.prune import squared_dist
 from repro.core.search import beam_search_flags
-from repro.core.store import IndexStore, VectorPlane, quantization_params
+from repro.core.store import (
+    IndexStore, VectorPlane, quantization_params, train_pq_codebooks,
+)
 
 from repro import compat
 from repro.compat import shard_map
@@ -71,12 +74,14 @@ def _plane_like(plane, row, rep):
         plane.tag, row,
         None if plane.scale is None else rep,
         None if plane.zero is None else rep,
+        None if plane.codebooks is None else rep,
     )
 
 
 def store_pspecs(store: IndexStore, index_axes: Sequence[str]):
     """PartitionSpec pytree of a row-sharded store: capacity-leading arrays
-    over ``index_axes``, quantization parameters replicated."""
+    over ``index_axes``, quantization parameters (int8 scale/zero, pq
+    codebooks) replicated."""
     row = P(tuple(index_axes))
     rep = P()
     none_or_row = lambda a: None if a is None else row
@@ -112,9 +117,13 @@ def shard_index(
     quantization error), or passed via ``qparams``, and replicated.
     """
     x = jnp.asarray(x)
-    if dtype == "int8" and qparams is None:
+    if dtype in ("int8", "pq") and qparams is None:
         real = np.asarray(global_ids) >= 0
-        qparams = quantization_params(x[jnp.asarray(real)])
+        xr = x[jnp.asarray(real)]
+        qparams = (
+            quantization_params(xr) if dtype == "int8"
+            else train_pq_codebooks(xr)
+        )
     store = IndexStore(
         plane=VectorPlane.encode(x, dtype, qparams),
         rerank=VectorPlane.encode(x, "f32") if rerank else None,
@@ -222,7 +231,8 @@ def make_sharded_search_fn(
     template = IndexStore(
         plane=VectorPlane(plane_tag, None,
                           None if plane_tag != "int8" else True,
-                          None if plane_tag != "int8" else True),
+                          None if plane_tag != "int8" else True,
+                          None if plane_tag != "pq" else True),
         rerank=None if not has_rerank else VectorPlane("f32", None),
         intervals=None, nbrs=None, status=None, entry=None,
     )
@@ -270,7 +280,9 @@ def local_shard_view(sidx: ShardedIndex, s: int, n_shards: int):
     def cut(pl):
         if pl is None:
             return None
-        return VectorPlane(pl.tag, pl.data[sl], pl.scale, pl.zero)
+        # rows are sliced; quantization params (scale/zero/codebooks) are
+        # replicated across shards, so they pass through shared.
+        return dataclasses.replace(pl, data=pl.data[sl])
 
     store = IndexStore(
         plane=cut(st.plane), rerank=cut(st.rerank),
@@ -499,7 +511,13 @@ def build_sharded_store(
     nbrs = jax.device_put(nbrs[:, :live_cols], row)
     stat = jax.device_put(stat[:, :live_cols], row)
 
-    qparams = quantization_params(jnp.asarray(x)) if dtype == "int8" else None
+    # Quantization params derive from the real rows (x, not the padded xs —
+    # zero pads would widen the int8 ranges / skew the pq centroids).
+    qparams = None
+    if dtype == "int8":
+        qparams = quantization_params(jnp.asarray(x))
+    elif dtype == "pq":
+        qparams = train_pq_codebooks(jnp.asarray(x))
     store = IndexStore(
         plane=VectorPlane.encode(jnp.asarray(xs), dtype, qparams),
         rerank=VectorPlane.encode(jnp.asarray(xs), "f32") if rerank else None,

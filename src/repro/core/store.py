@@ -7,10 +7,13 @@ Before this module the repo carried three divergent index representations
 them (DESIGN.md §12): one registered pytree holding
 
 * a **vector plane** — the scoring representation of the corpus vectors.
-  Three plane tags: ``f32`` (paper-faithful), ``bf16`` (2 bytes/dim, cast
-  in-register by the existing expand-score kernels), and ``int8``
+  Four plane tags: ``f32`` (paper-faithful), ``bf16`` (2 bytes/dim, cast
+  in-register by the existing expand-score kernels), ``int8``
   (scalar-quantized, per-dimension affine ``x ≈ q·scale + zero``,
-  dequantized in-register by the quantized kernel twins);
+  dequantized in-register by the quantized kernel twins), and ``pq``
+  (product-quantized: ``m`` subspaces of ``d/m`` dims, 256 k-means
+  centroids each, one uint8 code per subspace, scored through per-query
+  lookup tables — DESIGN.md §14);
 * an optional **fp32 rerank plane** — exact vectors used only to re-score
   the final beam, so a quantized scan plane keeps f32-grade top-k;
 * the graph (``nbrs``/``status``), the interval column, the entry
@@ -40,9 +43,12 @@ import jax.numpy as jnp
 from repro.core.entry import EntryIndex, build_entry_index
 from repro.core.exact import DenseGraph
 
-PLANE_TAGS = ("f32", "bf16", "int8")
+PLANE_TAGS = ("f32", "bf16", "int8", "pq")
 _PLANE_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 _QMAX = 127.0  # int8 code range is [-127, 127]; -128 stays unused (symmetric)
+PQ_K = 256     # centroids per subspace — one uint8 code each
+_PQ_TRAIN_SAMPLE = 4096
+_PQ_TRAIN_ITERS = 10
 
 
 def quantization_params(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -55,6 +61,65 @@ def quantization_params(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return scale, zero
 
 
+def default_pq_m(d: int) -> int:
+    """Default subspace count: ~8 dims per subspace, reduced until it
+    divides ``d`` evenly (d=24 → m=3, d=16 → m=2, d=12 → m=1)."""
+    m = max(d // 8, 1)
+    while d % m:
+        m -= 1
+    return m
+
+
+def _pq_sq_dists(xs: jnp.ndarray, cb: jnp.ndarray) -> jnp.ndarray:
+    """(m, s, K) squared distances from subvectors to centroids."""
+    return (
+        jnp.sum(xs * xs, axis=-1)[:, :, None]
+        - 2.0 * jnp.einsum("msd,mkd->msk", xs, cb)
+        + jnp.sum(cb * cb, axis=-1)[:, None, :]
+    )
+
+
+@jax.jit
+def _pq_lloyd(xs: jnp.ndarray, cb: jnp.ndarray) -> jnp.ndarray:
+    """``_PQ_TRAIN_ITERS`` Lloyd iterations over every subspace at once.
+    Empty clusters keep their previous centroid (no reseeding — keeps the
+    training deterministic and jit-friendly)."""
+
+    def step(cb, _):
+        assign = jnp.argmin(_pq_sq_dists(xs, cb), axis=-1)          # (m, s)
+        onehot = jax.nn.one_hot(assign, cb.shape[1], dtype=jnp.float32)
+        counts = jnp.sum(onehot, axis=1)                            # (m, K)
+        sums = jnp.einsum("msk,msd->mkd", onehot, xs)               # (m, K, dsub)
+        new = sums / jnp.maximum(counts[..., None], 1.0)
+        return jnp.where((counts > 0)[..., None], new, cb), None
+
+    cb, _ = jax.lax.scan(step, cb, None, length=_PQ_TRAIN_ITERS)
+    return cb
+
+
+def train_pq_codebooks(
+    x: jnp.ndarray, m: int | None = None, *, seed: int = 0
+) -> jnp.ndarray:
+    """On-device k-means codebook training: ``(m, 256, d/m)`` f32.
+
+    Trains on a deterministic sample of ≤ ``_PQ_TRAIN_SAMPLE`` rows,
+    initialized from distinct permuted sample rows per subspace.  The
+    result is **frozen** at encode time exactly like the int8 qparams —
+    streaming inserts encode new rows under the frozen codebooks
+    (retraining would invalidate every stored code)."""
+    x32 = jnp.asarray(x).astype(jnp.float32)
+    n, d = x32.shape
+    if m is None:
+        m = default_pq_m(d)
+    if m < 1 or d % m:
+        raise ValueError(f"pq subspace count m={m} must divide d={d}")
+    s = max(min(n, _PQ_TRAIN_SAMPLE), 1)
+    perm = jax.random.permutation(jax.random.key(seed), max(n, 1))[:s]
+    xs = x32[perm].reshape(s, m, d // m).transpose(1, 0, 2)  # (m, s, dsub)
+    init = xs[:, jnp.arange(PQ_K) % s, :]                    # (m, K, dsub)
+    return _pq_lloyd(xs, init)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class VectorPlane:
@@ -65,24 +130,28 @@ class VectorPlane:
     different tag compiles a different program.
     """
 
-    tag: str                        # "f32" | "bf16" | "int8"
-    data: jnp.ndarray               # (cap, d) in the plane dtype
+    tag: str                        # "f32" | "bf16" | "int8" | "pq"
+    data: jnp.ndarray               # (cap, d) in the plane dtype; pq: (cap, m) u8
     scale: jnp.ndarray | None = None  # (d,) f32 — int8 only
     zero: jnp.ndarray | None = None   # (d,) f32 — int8 only
+    codebooks: jnp.ndarray | None = None  # (m, 256, d/m) f32 — pq only
 
     def tree_flatten(self):
-        return (self.data, self.scale, self.zero), self.tag
+        return (self.data, self.scale, self.zero, self.codebooks), self.tag
 
     @classmethod
     def tree_unflatten(cls, tag, children):
-        data, scale, zero = children
-        return cls(tag, data, scale, zero)
+        data, scale, zero, codebooks = children
+        return cls(tag, data, scale, zero, codebooks)
 
     # ------------------------------------------------------------- encode
     @classmethod
-    def encode(cls, x: jnp.ndarray, tag: str, qparams=None) -> "VectorPlane":
+    def encode(
+        cls, x: jnp.ndarray, tag: str, qparams=None, *, pq_m: int | None = None
+    ) -> "VectorPlane":
         """Encode f32 vectors into a plane; ``qparams`` overrides the
-        derived int8 (scale, zero) — used to re-encode rows of a grown
+        derived int8 (scale, zero) — or, for ``pq``, the trained
+        ``(m, 256, d/m)`` codebooks — used to re-encode rows of a grown
         capacity under frozen parameters."""
         if tag not in PLANE_TAGS:
             raise ValueError(f"unknown plane tag {tag!r} (choices {PLANE_TAGS})")
@@ -92,6 +161,10 @@ class VectorPlane:
             return cls(tag, data)
         if tag == "bf16":
             return cls(tag, x.astype(jnp.bfloat16))
+        if tag == "pq":
+            cb = train_pq_codebooks(x, pq_m) if qparams is None else jnp.asarray(qparams)
+            plane = cls(tag, jnp.zeros((0, cb.shape[0]), jnp.uint8), codebooks=cb)
+            return dataclasses.replace(plane, data=plane.encode_rows(x))
         scale, zero = quantization_params(x) if qparams is None else qparams
         plane = cls(tag, jnp.zeros((0,), jnp.int8), scale, zero)
         return dataclasses.replace(plane, data=plane.encode_rows(x))
@@ -104,16 +177,30 @@ class VectorPlane:
             return rows if rows.dtype == jnp.float32 else rows.astype(jnp.float32)
         if self.tag == "bf16":
             return rows.astype(jnp.bfloat16)
+        if self.tag == "pq":
+            m, _, dsub = self.codebooks.shape
+            r = rows.astype(jnp.float32).reshape(rows.shape[0], m, dsub)
+            d2 = _pq_sq_dists(r.transpose(1, 0, 2), self.codebooks)  # (m, b, K)
+            return jnp.argmin(d2, axis=-1).T.astype(jnp.uint8)       # (b, m)
         q = jnp.round((rows.astype(jnp.float32) - self.zero) / self.scale)
         return jnp.clip(q, -_QMAX, _QMAX).astype(jnp.int8)
 
     # ------------------------------------------------------------- decode
+    def _pq_decode_codes(self, codes: jnp.ndarray) -> jnp.ndarray:
+        """(b, m) uint8 codes → (b, d) f32 centroid reconstructions."""
+        m, k, dsub = self.codebooks.shape
+        flat = self.codebooks.reshape(m * k, dsub)
+        idx = codes.astype(jnp.int32) + (jnp.arange(m, dtype=jnp.int32) * k)[None, :]
+        return flat[idx].reshape(codes.shape[0], m * dsub)
+
     def decode(self) -> jnp.ndarray:
         """The (cap, d) f32 view.  Identity (same buffer) for ``f32``."""
         if self.tag == "f32":
             return self.data
         if self.tag == "bf16":
             return self.data.astype(jnp.float32)
+        if self.tag == "pq":
+            return self._pq_decode_codes(self.data)
         return self.data.astype(jnp.float32) * self.scale + self.zero
 
     def decode_rows(self, ids: jnp.ndarray) -> jnp.ndarray:
@@ -124,24 +211,34 @@ class VectorPlane:
             return rows
         if self.tag == "bf16":
             return rows.astype(jnp.float32)
+        if self.tag == "pq":
+            return self._pq_decode_codes(rows)
         return rows.astype(jnp.float32) * self.scale + self.zero
 
     # -------------------------------------------------------------- stats
     @property
     def dim(self) -> int:
+        if self.tag == "pq":
+            m, _, dsub = self.codebooks.shape
+            return m * dsub
         return self.data.shape[-1]
 
     def memory_bytes(self) -> int:
         b = self.data.size * self.data.dtype.itemsize
-        for a in (self.scale, self.zero):
+        for a in (self.scale, self.zero, self.codebooks):
             if a is not None:
                 b += a.size * a.dtype.itemsize
         return int(b)
 
-    def bytes_per_vector(self) -> float:
-        """Amortized plane bytes per stored vector (qparams included)."""
-        n = max(self.data.shape[0], 1)
-        return self.memory_bytes() / n
+    def bytes_per_vector(self, n_live: int | None = None) -> float:
+        """Amortized plane bytes per stored vector (qparams/codebooks
+        included).  ``n_live`` is the live-row count; it defaults to the
+        row capacity, but callers that grew the store must pass the live
+        count — capacity doubling would otherwise silently halve the
+        reported bytes/vec (the store itself owns the alive mask, so the
+        plane cannot derive liveness here)."""
+        n = self.data.shape[0] if n_live is None else n_live
+        return self.memory_bytes() / max(n, 1)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -183,6 +280,12 @@ class IndexStore:
     def graph(self) -> DenseGraph:
         """DenseGraph view over the same buffers (no copy)."""
         return DenseGraph(self.nbrs, self.status)
+
+    def live_count(self) -> int:
+        """Number of live rows (capacity when no alive mask is set)."""
+        if self.alive is None:
+            return self.capacity
+        return int(jnp.sum(self.alive))
 
     def vectors_f32(self) -> jnp.ndarray:
         """Best-precision f32 vectors: the rerank plane when present, else
@@ -263,7 +366,8 @@ class IndexStore:
             "entry": 0 if ent is None else int(
                 sum(a.size * a.dtype.itemsize for a in ent)
             ),
-            "masks": 0 if self.alive is None else 2 * self.capacity,
+            "masks": (0 if self.alive is None else self.capacity)
+            + (0 if self.free is None else self.capacity),
         }
         out["total"] = sum(out.values())
         return out
@@ -278,6 +382,7 @@ def make_store(
     dtype: str = "f32",
     rerank: bool = False,
     qparams=None,
+    pq_m: int | None = None,
     entry: EntryIndex | None = None,
     build_entry: bool = True,
     alive: jnp.ndarray | None = None,
@@ -294,7 +399,7 @@ def make_store(
     if entry is None and build_entry:
         entry = build_entry_index(intervals, node_mask=alive)
     return IndexStore(
-        plane=VectorPlane.encode(x, dtype, qparams),
+        plane=VectorPlane.encode(x, dtype, qparams, pq_m=pq_m),
         rerank=VectorPlane.encode(x, "f32") if rerank else None,
         intervals=intervals,
         nbrs=jnp.asarray(nbrs),

@@ -205,6 +205,148 @@ def expand_score_q_legacy(
     return jnp.where(idx >= 0, dist, jnp.inf)
 
 
+# ---------------------------------------------------------------- pallas (pq)
+def pq_lut(codebooks: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Per-query subspace distance tables: ``lut[b, j, k]`` is the squared
+    L2 between query ``b``'s ``j``-th subvector and centroid ``k`` of
+    subspace ``j`` — computed **once per batch** (ADC, Jégou et al. 2011).
+
+    Each entry is an independent elementwise square-difference sum over the
+    ``d/m`` subspace dims, so per-row tables are bitwise invariant under
+    batch composition — the same invariance contract as the fused distance
+    kernels (module docstring).  The transient ``(B, m, 256, d/m)`` diff
+    is ``256·d·4`` bytes per query; at very large ``B·d`` it can be chunked
+    over subspaces without changing a single bit (entries are independent).
+    """
+    B = q.shape[0]
+    m, k, dsub = codebooks.shape
+    qs = q.astype(jnp.float32).reshape(B, m, dsub)
+    diff = qs[:, :, None, :] - codebooks[None]         # (B, m, K, dsub)
+    return jnp.sum(diff * diff, axis=-1)               # (B, m, K)
+
+
+def _fold_sum_m(vals: jnp.ndarray) -> jnp.ndarray:
+    """Strict left-to-right sum over the last (subspace) axis.
+
+    ``m`` is a small static constant, so this unrolls to a chain of adds.
+    Both PQ backends reduce through this fold — a bare ``jnp.sum`` lets the
+    compiler pick a backend-dependent association order over the ``m``
+    lookups, which breaks the bit-identity contract (f32 adds don't
+    reassociate)."""
+    out = vals[..., 0]
+    for j in range(1, vals.shape[-1]):
+        out = out + vals[..., j]
+    return out
+
+
+def _kernel_pq(idx_ref, lut_ref, codes_ref, o_ref):
+    lut = lut_ref[0]                                    # (m, K) — query b's tables
+    code = codes_ref[0].astype(jnp.int32)               # (m,) — row idx_ref[b, c]
+    vals = jnp.take_along_axis(lut, code[:, None], axis=1)[:, 0]  # (m,)
+    o_ref[0, 0] = _fold_sum_m(vals)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def expand_score_pq(
+    codes: jnp.ndarray,      # (n, m) uint8 PQ codes (stay in HBM)
+    codebooks: jnp.ndarray,  # (m, 256, d/m) f32 frozen codebooks
+    idx: jnp.ndarray,        # (B, C) int32 candidate ids (-1 = masked/padding)
+    q: jnp.ndarray,          # (B, d) queries
+    *,
+    interpret: bool = False,
+    lut: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """PQ-plane :func:`expand_score`: squared L2 between ``q[b]`` and the
+    *decoded* row ``idx[b, c]``, without ever decoding it.  The per-query
+    ``(m, 256)`` LUT is built once per batch (:func:`pq_lut`, or passed in
+    precomputed by the fused search loop); each grid step then DMAs one
+    ``(1, m)`` uint8 code row — the same scalar-prefetch schedule as the
+    f32/int8 kernels — and sums ``m`` table lookups in-register.  Per-step
+    row traffic drops from ``4d`` to ``m`` bytes and neither a ``(B, C, d)``
+    gather nor a decoded ``(n, d)`` corpus ever exists."""
+    B, C = idx.shape
+    n, m = codes.shape
+    k = codebooks.shape[1]
+    if lut is None:
+        lut = pq_lut(codebooks, q)
+    safe = jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, C),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda b, c, idx_ref: (b, 0, 0)),
+            pl.BlockSpec((1, m), lambda b, c, idx_ref: (idx_ref[b, c], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, c, idx_ref: (b, c)),
+    )
+    out = pl.pallas_call(
+        _kernel_pq,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        compiler_params=compiler_params(("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(safe, lut, codes)
+    return jnp.where(idx >= 0, out, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def expand_score_pq_xla(
+    codes: jnp.ndarray,      # (n, m) uint8
+    codebooks: jnp.ndarray,  # (m, 256, d/m) f32
+    idx: jnp.ndarray,        # (B, C) int32, -1 = masked
+    q: jnp.ndarray,          # (B, d)
+    *,
+    chunk: int = 32,
+    lut: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """CPU-CI twin of :func:`expand_score_pq`: the same once-per-batch LUT
+    (:func:`pq_lut`), then a ``fori_loop`` over ``chunk``-wide candidate
+    slices gathering ``(B, chunk, m)`` uint8 code rows and summing the
+    ``m`` table lookups per row.  Lookups index identical LUT entries and
+    the sum runs over subspaces in the same order as the Pallas kernel, so
+    the two are bit-identical for any ``chunk`` and batch composition."""
+    B, C = idx.shape
+    n, m = codes.shape
+    if lut is None:
+        lut = pq_lut(codebooks, q)                     # (B, m, K)
+    chunk = max(min(chunk, (C + 1) // 2 if C > 1 else 1), 1)
+    Cp = ((C + chunk - 1) // chunk) * chunk
+    safe = jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+    if Cp != C:
+        safe = jnp.pad(safe, ((0, 0), (0, Cp - C)))
+
+    def body(t, acc):
+        sl = jax.lax.dynamic_slice_in_dim(safe, t * chunk, chunk, axis=1)
+        rows = codes[sl].astype(jnp.int32)             # (B, chunk, m) code rows
+        vals = jnp.take_along_axis(                    # (B, chunk, m) lookups
+            lut[:, None, :, :], rows[..., None], axis=-1
+        )[..., 0]
+        dc = _fold_sum_m(vals)                         # (B, chunk)
+        return jax.lax.dynamic_update_slice_in_dim(acc, dc, t * chunk, axis=1)
+
+    out = jax.lax.fori_loop(
+        0, Cp // chunk, body, jnp.zeros((B, Cp), jnp.float32)
+    )[:, :C]
+    return jnp.where(idx >= 0, out, jnp.inf)
+
+
+@jax.jit
+def expand_score_pq_legacy(
+    codes: jnp.ndarray, codebooks: jnp.ndarray,
+    idx: jnp.ndarray, q: jnp.ndarray,
+) -> jnp.ndarray:
+    """Pre-fusion baseline on the PQ plane: decode the **entire corpus** to
+    ``(n, d)`` f32, then the full ``(B, C, d)`` gather + matmul identity —
+    both intermediates the fused pair exists to avoid (A/B profiling)."""
+    n, m = codes.shape
+    k, dsub = codebooks.shape[1:]
+    flat = codebooks.reshape(m * k, dsub)
+    offs = (jnp.arange(m, dtype=jnp.int32) * k)[None, :]
+    dec = flat[codes.astype(jnp.int32) + offs].reshape(n, m * dsub)
+    return expand_score_legacy(dec, idx, q)
+
+
 # --------------------------------------------------------------------- xla
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def expand_score_xla(

@@ -66,7 +66,20 @@ def expand_score(
     return expand_score_mod.expand_score(x, idx, q, interpret=on_cpu())
 
 
-def expand_score_plane(plane, idx: jnp.ndarray, q: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+def pq_lut(plane, q: jnp.ndarray) -> jnp.ndarray | None:
+    """Per-query ``(m, 256)`` PQ distance tables for ``plane`` (None for
+    non-pq planes).  The fused search loop calls this once per batch and
+    hands the result to every :func:`expand_score_plane` step, so the LUT
+    build is structurally loop-invariant — not merely hoisted by XLA."""
+    if getattr(plane, "tag", None) != "pq":
+        return None
+    return expand_score_mod.pq_lut(plane.codebooks, q)
+
+
+def expand_score_plane(
+    plane, idx: jnp.ndarray, q: jnp.ndarray, *,
+    backend: str | None = None, lut: jnp.ndarray | None = None,
+) -> jnp.ndarray:
     """Beam-expansion scoring against a vector *plane* (core/store.py),
     dispatched on the plane's dtype tag.
 
@@ -74,9 +87,22 @@ def expand_score_plane(plane, idx: jnp.ndarray, q: jnp.ndarray, *, backend: str 
     DMA casts in-register, so bf16 needs no twin); ``int8`` routes through
     the quantized kernels, which dequantize the ``(1, d)`` row in-register
     (``x·scale + zero``) — same scalar-prefetch schedule, same traced
-    memory profile, 4× less row traffic.  ``plane`` is duck-typed
-    (``tag``/``data``/``scale``/``zero``) so the kernels layer never
-    imports core."""
+    memory profile, 4× less row traffic.  ``pq`` routes through the
+    LUT-based kernels: a per-query ``(m, 256)`` table built once per batch
+    (pass ``lut`` from :func:`pq_lut` to share it across fused-loop steps),
+    then one ``(1, m)`` uint8 code row DMA'd per candidate.  ``plane`` is
+    duck-typed (``tag``/``data``/``scale``/``zero``/``codebooks``) so the
+    kernels layer never imports core."""
+    if plane.tag == "pq":
+        resolved = resolve_backend(backend, choices=("pallas", "xla", "legacy"))
+        if resolved == "legacy":
+            return expand_score_mod.expand_score_pq_legacy(
+                plane.data, plane.codebooks, idx, q)
+        if resolved == "xla":
+            return expand_score_mod.expand_score_pq_xla(
+                plane.data, plane.codebooks, idx, q, lut=lut)
+        return expand_score_mod.expand_score_pq(
+            plane.data, plane.codebooks, idx, q, interpret=on_cpu(), lut=lut)
     if plane.tag != "int8":
         return expand_score(plane.data, idx, q, backend=backend)
     resolved = resolve_backend(backend, choices=("pallas", "xla", "legacy"))

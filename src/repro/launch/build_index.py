@@ -35,14 +35,16 @@ def main(argv=None) -> int:
                     choices=["auto", "pallas", "xla", "legacy"],
                     help="pruning-sweep kernel backend (auto = Pallas on TPU, "
                          "XLA on CPU); all three build bit-identical graphs")
-    ap.add_argument("--dtype", default="f32", choices=["f32", "bf16", "int8"],
-                    help="vector scan plane (DESIGN.md §12): bf16 halves and "
-                         "int8 quarters the per-vector scan bytes; the graph "
-                         "is always built from the f32 vectors")
+    ap.add_argument("--dtype", default="f32",
+                    choices=["f32", "bf16", "int8", "pq"],
+                    help="vector scan plane (DESIGN.md §12/§14): bf16 halves "
+                         "and int8 quarters the per-vector scan bytes; pq "
+                         "product-quantizes to one byte per d/m-dim subspace; "
+                         "the graph is always built from the f32 vectors")
     ap.add_argument("--rerank", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="attach the exact f32 rerank plane for final-top-k "
-                         "re-scoring (default: on for int8, off otherwise)")
+                         "re-scoring (default: on for int8/pq, off otherwise)")
     ap.add_argument("--out", default=None, help="directory to save the index")
     # store_true + default=True made --selftest a no-op (same pattern as the
     # launch/serve.py --reduced bug); BooleanOptionalAction restores

@@ -43,9 +43,10 @@ def main(argv=None) -> int:
                     help="search pipeline (default: fused; pallas on TPU, xla on CPU)")
     ap.add_argument("--width", type=int, default=4,
                     help="fused multi-expansion frontier width W")
-    ap.add_argument("--dtype", default="f32", choices=["f32", "bf16", "int8"],
-                    help="vector scan plane of the served index (int8 "
-                         "auto-attaches the f32 rerank plane; DESIGN.md §12)")
+    ap.add_argument("--dtype", default="f32",
+                    choices=["f32", "bf16", "int8", "pq"],
+                    help="vector scan plane of the served index (int8/pq "
+                         "auto-attach the f32 rerank plane; DESIGN.md §12/§14)")
     ap.add_argument("--mixed", action="store_true",
                     help="also serve one interleaved IF/IS/RF/RS stream "
                          "through the runtime-semantics path and compare "

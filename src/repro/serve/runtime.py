@@ -41,6 +41,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
+import random
 import threading
 import time
 import queue as _queue
@@ -54,6 +56,48 @@ import numpy as np
 from repro.ft.elastic import RescalePlan, plan_serve_rescale
 from repro.ft.straggler import FleetMonitor, StragglerConfig
 from repro.serve.engine import ServeEngine, bucket_batch_size
+
+
+_LAT_RESERVOIR_CAP = 4096
+
+
+class LatencyReservoir:
+    """Fixed-size uniform sample of a latency stream (Vitter's Algorithm R).
+
+    ``stats()`` wants percentiles over the whole run, but a long-lived
+    runtime must not grow host memory with traffic.  The first ``cap``
+    samples are kept verbatim; after that each new sample replaces a
+    uniformly random held slot with probability ``cap / seen``, which keeps
+    the held set a uniform random sample of everything ever offered.  The
+    RNG is seeded so repeated runs report identical percentiles.
+    """
+
+    def __init__(self, cap: int = _LAT_RESERVOIR_CAP, *, seed: int = 0):
+        if cap <= 0:
+            raise ValueError(f"reservoir cap must be positive, got {cap}")
+        self.cap = cap
+        self.seen = 0
+        self._rng = random.Random(seed)
+        self._sample: list[float] = []
+
+    def offer(self, x: float) -> None:
+        self.seen += 1
+        if len(self._sample) < self.cap:
+            self._sample.append(x)
+        else:
+            j = self._rng.randrange(self.seen)
+            if j < self.cap:
+                self._sample[j] = x
+
+    def extend(self, xs) -> None:
+        for x in xs:
+            self.offer(x)
+
+    def __len__(self) -> int:
+        return len(self._sample)
+
+    def __iter__(self):
+        return iter(self._sample)
 
 
 class DeadlineExceeded(Exception):
@@ -144,11 +188,17 @@ class ServeRuntime:
         self._completer: threading.Thread | None = None
         self._stopping = False
         self._stats_lock = threading.Lock()
-        self._latencies: list[float] = []
+        self._latencies = LatencyReservoir()
         self._completed = 0
         self._rejected = 0
         self._writes = 0
-        self._t_start = clock()
+        # Wall clock for qps accounts *active* serving windows only: time
+        # between start()/stop() pairs plus time spent inside
+        # run_until_idle().  Anchoring at construction (the old behaviour)
+        # charged queries for index-build / idle time and made stop/start
+        # cycles report qps against the wrong window.
+        self._t_start: float | None = None
+        self._wall_accum = 0.0
 
     # ------------------------------------------------------------ admission
     def submit(
@@ -324,19 +374,25 @@ class ServeRuntime:
     # ------------------------------------------------------------ execution
     def run_until_idle(self) -> int:
         """Inline mode: pump dequeue → dispatch → complete until the queue is
-        empty.  Returns the number of work units processed."""
+        empty.  Returns the number of work units processed.  The pump's own
+        wall time counts toward the qps window (stats())."""
         done = 0
-        while True:
-            work = self._next_work(block=False)
-            if work is None:
-                return done
-            done += 1
-            if isinstance(work, _Write):
-                self._apply_write(work)
-            else:
-                inflight = self._launch(work)
-                if inflight is not None:
-                    self._complete(inflight)
+        t0 = self.clock()
+        try:
+            while True:
+                work = self._next_work(block=False)
+                if work is None:
+                    return done
+                done += 1
+                if isinstance(work, _Write):
+                    self._apply_write(work)
+                else:
+                    inflight = self._launch(work)
+                    if inflight is not None:
+                        self._complete(inflight)
+        finally:
+            with self._stats_lock:
+                self._wall_accum += self.clock() - t0
 
     def _dispatch_loop(self) -> None:
         while True:
@@ -361,7 +417,8 @@ class ServeRuntime:
     def start(self) -> "ServeRuntime":
         if self._dispatcher is not None:
             raise RuntimeError("runtime already started")
-        self._t_start = self.clock()
+        with self._stats_lock:
+            self._t_start = self.clock()
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name="serve-dispatch", daemon=True)
         self._completer = threading.Thread(
@@ -379,6 +436,10 @@ class ServeRuntime:
             self._dispatcher.join()
             self._completer.join()
             self._dispatcher = self._completer = None
+        with self._stats_lock:
+            if self._t_start is not None:
+                self._wall_accum += self.clock() - self._t_start
+                self._t_start = None
         # _stopping only closes admission once threads exist; inline-mode
         # users never set it, so a stopped runtime can be started again.
         self._stopping = False
@@ -391,27 +452,38 @@ class ServeRuntime:
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
-        """Serving counters + latency percentiles over the current run."""
+        """Serving counters + latency percentiles over the current run.
+
+        ``qps`` is completed requests over the *active* wall time — closed
+        start/stop windows plus run_until_idle() pumps plus the currently
+        open start() window, if any.  Percentiles come from a bounded
+        uniform reservoir of the per-request latencies."""
         with self._stats_lock:
             lats = sorted(self._latencies)
             completed = self._completed
             rejected = self._rejected
             writes = self._writes
-        wall = max(self.clock() - self._t_start, 1e-9)
+            wall = self._wall_accum
+            if self._t_start is not None:
+                wall += self.clock() - self._t_start
         return {
             "completed": completed,
             "rejected": rejected,
             "writes": writes,
-            "qps": completed / wall,
+            "qps": completed / max(wall, 1e-9),
             "p50_ms": 1e3 * _pctl(lats, 0.50),
             "p99_ms": 1e3 * _pctl(lats, 0.99),
         }
 
 
 def _pctl(sorted_xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile: the smallest element with at least ``q`` of
+    the sample at or below it, i.e. index ``ceil(q*n) - 1``.  (``int(q*n)``
+    sits one rank high: it maps the median of [1, 2] to 2.)"""
     if not sorted_xs:
         return 0.0
-    i = min(int(q * len(sorted_xs)), len(sorted_xs) - 1)
+    n = len(sorted_xs)
+    i = min(max(math.ceil(q * n) - 1, 0), n - 1)
     return sorted_xs[i]
 
 

@@ -22,12 +22,37 @@ import pytest
 from repro.core import intervals as iv
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-slow", action="store_true", default=False,
+        help="include tests marked slow (the heaviest hypothesis suites, "
+             "excluded from the default tier-1 run to stay in CI budget)",
+    )
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "hermetic: property/parity suites the no-hypothesis CI job runs "
         "(selected by marker — never by a hardcoded file list)",
     )
+    config.addinivalue_line(
+        "markers",
+        "slow: heaviest property suites; skipped by default, run with "
+        "--run-slow (an explicit -m selection also includes them)",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    # An explicit marker selection (-m hermetic, -m slow, ...) means the
+    # caller chose their own slice — don't second-guess it.
+    if config.getoption("--run-slow") or config.getoption("-m"):
+        return
+    skip = pytest.mark.skip(
+        reason="slow suite: tier-2 by default, enable with --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
 
 
 @pytest.fixture(scope="session")

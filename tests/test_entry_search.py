@@ -125,6 +125,7 @@ def test_search_no_valid_nodes(small_corpus):
     assert bool((res2.ids == -1).all())
 
 
+@pytest.mark.slow
 def test_search_results_satisfy_predicate(medium_corpus):
     """Every returned id satisfies the query predicate (search never leaves
     the valid subgraph — Alg. 4 lines 11-20)."""
@@ -151,6 +152,7 @@ def test_search_results_satisfy_predicate(medium_corpus):
                     assert ints_np[v, 0] <= qn[i, 0] and qn[i, 1] <= ints_np[v, 1]
 
 
+@pytest.mark.slow
 def test_ug_recall_threshold(medium_corpus):
     """Practical UG achieves high recall on all four semantics (Exp-1/2)."""
     x, ints = medium_corpus

@@ -87,6 +87,7 @@ def _dedup_oracle(ids, flag):
     return out
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_dedup_sort_matches_quadratic(seed):

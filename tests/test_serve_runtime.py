@@ -325,3 +325,112 @@ def test_runtime_writer_reuses_engine_chunk_plan(monkeypatch):
     rt.run_until_idle()
     assert fut.result(timeout=5) == 400
     assert calls["n"] == 1
+
+
+# ------------------------------------------------------- stats (ISSUE-7)
+def test_pctl_nearest_rank_known_quantiles():
+    """Nearest-rank percentile: index ceil(q*n)-1.  The old int(q*n) sat
+    one rank high — the median of [1, 2] came back as 2."""
+    from repro.serve.runtime import _pctl
+
+    assert _pctl([], 0.5) == 0.0
+    assert _pctl([7.0], 0.5) == 7.0
+    assert _pctl([1.0, 2.0], 0.5) == 1.0          # the ISSUE-7 repro
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert _pctl(xs, 0.25) == 1.0
+    assert _pctl(xs, 0.50) == 2.0
+    assert _pctl(xs, 0.75) == 3.0
+    assert _pctl(xs, 0.99) == 4.0
+    assert _pctl(xs, 1.00) == 4.0
+    hundred = [float(i) for i in range(1, 101)]
+    assert _pctl(hundred, 0.50) == 50.0
+    assert _pctl(hundred, 0.99) == 99.0
+    assert _pctl(hundred, 0.999) == 100.0
+
+
+def test_latency_reservoir_bounds_memory_and_samples_uniformly():
+    from repro.serve.runtime import LatencyReservoir
+
+    r = LatencyReservoir(100, seed=0)
+    for i in range(10_000):
+        r.offer(float(i))
+    assert len(r) == 100 and r.seen == 10_000
+    vals = sorted(r)
+    assert all(0.0 <= v < 10_000 for v in vals)
+    # a uniform sample of 0..9999 lands a near-uniform spread, not the head
+    assert vals[0] < 2_000 and vals[-1] > 8_000
+    # seeded: two identical streams hold identical samples
+    r2 = LatencyReservoir(100, seed=0)
+    r2.extend(float(i) for i in range(10_000))
+    assert sorted(r2) == vals
+    # below cap: verbatim
+    r3 = LatencyReservoir(100)
+    r3.extend([3.0, 1.0, 2.0])
+    assert sorted(r3) == [1.0, 2.0, 3.0]
+    with pytest.raises(ValueError):
+        LatencyReservoir(0)
+
+
+def test_runtime_latencies_are_bounded():
+    rt = ServeRuntime(make_engine())
+    from repro.serve.runtime import LatencyReservoir
+
+    assert isinstance(rt._latencies, LatencyReservoir)
+
+
+def test_stats_wall_clock_covers_active_windows_only():
+    """ISSUE-7 satellite: qps must be measured over start/stop windows (and
+    run_until_idle pumps), not since construction — idle time between
+    cycles and pre-start build time must not dilute it."""
+    eng = make_engine()
+    clk = FakeClock()
+    qv, qi, flags = make_queries(8)
+    # warm the search_mixed compile cache on a throwaway runtime so the
+    # timed cycles below never sit behind a cold XLA compile
+    warm = ServeRuntime(eng, RuntimeConfig(max_batch=8))
+    for i in range(8):
+        warm.submit(qv[i], qi[i], flags[i])
+    warm.run_until_idle()
+
+    rt = ServeRuntime(eng, RuntimeConfig(max_batch=8), clock=clk)
+    clk.advance(500.0)                 # idle before serving ever starts
+    rt.start()
+    futs = [rt.submit(qv[i], qi[i], flags[i]) for i in range(8)]
+    for f in futs:
+        f.result(timeout=120)
+    clk.advance(2.0)                   # the only active wall time
+    rt.stop()
+    clk.advance(500.0)                 # idle after stop
+    s = rt.stats()
+    assert s["completed"] == 8
+    assert s["qps"] == pytest.approx(8 / 2.0)
+
+    # a second start/stop cycle extends the window, idle gaps still excluded
+    rt.start()
+    futs = [rt.submit(qv[i], qi[i], flags[i]) for i in range(8)]
+    for f in futs:
+        f.result(timeout=120)
+    clk.advance(3.0)
+    rt.stop()
+    s = rt.stats()
+    assert s["completed"] == 16
+    assert s["qps"] == pytest.approx(16 / 5.0)
+
+
+def test_stats_wall_clock_inline_mode():
+    """Inline pumps count their own wall time; construction-to-run idle
+    time does not leak into the qps denominator (the old behaviour made
+    run_until_idle users report near-zero qps)."""
+    eng = make_engine()
+    clk = FakeClock()
+    rt = ServeRuntime(eng, clock=clk)
+    qv, qi, flags = make_queries(5)
+    clk.advance(1000.0)                # idle: would dominate the old window
+    for i in range(5):
+        rt.submit(qv[i], qi[i], flags[i])
+    rt.run_until_idle()
+    s = rt.stats()
+    assert s["completed"] == 5
+    # the fake clock does not tick inside the pump, so the active window is
+    # ~0 — any qps below completed/1s means idle time leaked in
+    assert s["qps"] > 5.0

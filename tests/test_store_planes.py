@@ -22,7 +22,10 @@ import pytest
 
 from repro.core import Semantics, UGConfig, UGIndex, recall
 from repro.core import intervals as iv
-from repro.core.store import VectorPlane, quantization_params
+from repro.core.store import (
+    PQ_K, VectorPlane, default_pq_m, quantization_params,
+    train_pq_codebooks,
+)
 from repro.kernels import ops
 
 pytestmark = pytest.mark.hermetic  # parity suite for the no-hypothesis job
@@ -173,7 +176,7 @@ def _assert_store_bitwise(a, b):
     np.testing.assert_array_equal(np.asarray(a.plane.data),
                                   np.asarray(b.plane.data))
     assert a.plane.tag == b.plane.tag
-    for f in ("scale", "zero"):
+    for f in ("scale", "zero", "codebooks"):
         av, bv = getattr(a.plane, f), getattr(b.plane, f)
         assert (av is None) == (bv is None)
         if av is not None:
@@ -251,6 +254,13 @@ def test_shard_index_qparams_ignore_pad_rows(plane_index):
                                   np.asarray(want_scale))
     np.testing.assert_array_equal(np.asarray(sidx.store.plane.zero),
                                   np.asarray(want_zero))
+    # pq codebooks follow the same rule: trained over real rows only,
+    # replicated across shards like the int8 qparams
+    sidx_pq = shard_index(mesh, ("data",), xp, ip, nbp, stp, gid, dtype="pq")
+    assert sidx_pq.store.plane.tag == "pq"
+    want_cb = train_pq_codebooks(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(sidx_pq.store.plane.codebooks),
+                                  np.asarray(want_cb))
 
 
 # ----------------------------------------------------------------- serving
@@ -310,3 +320,208 @@ def test_quantization_params_shapes(plane_index):
     assert scale.shape == (plane_index.store.dim,)
     assert zero.shape == (plane_index.store.dim,)
     assert bool(jnp.all(scale > 0))
+
+
+# ----------------------------------------------------------------- pq plane
+def test_default_pq_m_divides_dim():
+    for d in (8, 12, 16, 24, 32, 48, 7, 11):
+        m = default_pq_m(d)
+        assert m >= 1 and d % m == 0, (d, m)
+    assert default_pq_m(24) == 3
+    assert default_pq_m(16) == 2
+
+
+def test_pq_codebook_training_deterministic():
+    """Codebook training is a pure function of (data, m, seed): two encodes
+    of the same corpus agree bitwise, and frozen-codebook row encoding
+    matches full-plane encoding bitwise (the streaming-insert contract)."""
+    x = jax.random.normal(jax.random.key(21), (300, 24))
+    a = VectorPlane.encode(x, "pq")
+    b = VectorPlane.encode(x, "pq")
+    m = default_pq_m(24)
+    assert a.codebooks.shape == (m, PQ_K, 24 // m)
+    assert a.data.shape == (300, m) and a.data.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(a.codebooks),
+                                  np.asarray(b.codebooks))
+    np.testing.assert_array_equal(np.asarray(a.data), np.asarray(b.data))
+    rows = a.encode_rows(x[:9])
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(a.data[:9]))
+    # encoding under pre-trained codebooks (the sharded path) is the same
+    cb = train_pq_codebooks(x)
+    c = VectorPlane.encode(x, "pq", qparams=cb)
+    np.testing.assert_array_equal(np.asarray(c.data), np.asarray(a.data))
+
+
+def test_pq_decode_roundtrip_reasonable():
+    x = jax.random.normal(jax.random.key(22), (400, 24))
+    plane = VectorPlane.encode(x, "pq")
+    assert plane.dim == 24
+    dec = plane.decode()
+    assert dec.shape == x.shape and dec.dtype == jnp.float32
+    rel = float(jnp.linalg.norm(dec - x) / jnp.linalg.norm(x))
+    assert rel < 0.5, rel    # coarse codes, but far from garbage
+    np.testing.assert_array_equal(np.asarray(plane.decode_rows(jnp.arange(5))),
+                                  np.asarray(dec[:5]))
+
+
+def test_expand_score_pq_backends_bitwise():
+    """The Pallas LUT kernel and its chunked XLA twin agree bitwise, across
+    chunk widths and batch composition, and honor the shared LUT path."""
+    k1, k2, k3 = jax.random.split(jax.random.key(9), 3)
+    n, d, B, C = 257, 24, 6, 23
+    x = jax.random.normal(k1, (n, d))
+    plane = VectorPlane.encode(x, "pq")
+    q = jax.random.normal(k2, (B, d))
+    idx = jax.random.randint(k3, (B, C), -2, n)
+    outs = {
+        b: np.asarray(ops.expand_score_plane(plane, idx, q, backend=b))
+        for b in ("pallas", "xla")
+    }
+    np.testing.assert_array_equal(outs["pallas"], outs["xla"])
+    assert np.isinf(outs["xla"][np.asarray(idx) < 0]).all()
+    from repro.kernels.expand_score import expand_score_pq_xla
+
+    # chunk invariance of the xla twin (elementwise LUT-gather contract)
+    for chunk in (1, 3, 7, 19, 32):
+        np.testing.assert_array_equal(
+            np.asarray(expand_score_pq_xla(
+                plane.data, plane.codebooks, idx, q, chunk=chunk)),
+            outs["xla"])
+    # batch composition: each row scored alone matches its slice of the batch
+    for b in ("pallas", "xla"):
+        for i in range(B):
+            np.testing.assert_array_equal(
+                np.asarray(ops.expand_score_plane(
+                    plane, idx[i:i + 1], q[i:i + 1], backend=b))[0],
+                outs[b][i])
+    # precomputed-LUT path (what the fused step uses) is the same program
+    lut = ops.pq_lut(plane, q)
+    assert lut.shape == (B, plane.codebooks.shape[0], PQ_K)
+    for b in ("pallas", "xla"):
+        np.testing.assert_array_equal(
+            np.asarray(ops.expand_score_plane(plane, idx, q, backend=b,
+                                              lut=lut)),
+            outs[b])
+    # legacy decode-then-score agrees numerically (different f32 association
+    # order between the m-fold ADC sum and the d-fold decoded sum: allclose)
+    legacy = np.asarray(ops.expand_score_plane(plane, idx, q, backend="legacy"))
+    fin = np.isfinite(outs["xla"])
+    np.testing.assert_allclose(legacy[fin], outs["xla"][fin], rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_search_step_profile_pq():
+    """The pq step keeps the traced-memory contract: no (B, C, d) gather,
+    no (·, C, C) dedup tensor, and — the ADC guarantee — no decoded f32
+    (n, d) corpus anywhere in the jaxpr."""
+    from repro.core.search import search_step_memory_profile
+
+    for backend in ("xla", "pallas"):
+        prof = search_step_memory_profile(backend, dtype="pq")
+        assert not prof["gather_bcd"], backend
+        assert not prof["quadratic_cc"], backend
+        assert not prof["decoded_nd"], backend
+    legacy = search_step_memory_profile("legacy", dtype="pq")
+    assert legacy["gather_bcd"] and legacy["quadratic_cc"]
+    assert legacy["decoded_nd"]
+
+
+def test_pq_rerank_recall_parity(plane_index, plane_queries):
+    """pq + f32 rerank stays within 0.05 of the f32 plane on the same graph
+    (the ISSUE-7 acceptance bound)."""
+    qv, qi = plane_queries
+    idxpq = plane_index.with_dtype("pq")
+    assert idxpq.dtype == "pq" and idxpq.store.rerank is not None
+    for sem in (Semantics.IF, Semantics.IS):
+        gt = plane_index.ground_truth(qv, qi, sem=sem, k=10)
+        r_f32 = recall(plane_index.search(qv, qi, sem=sem, ef=64, k=10), gt)
+        r_pq = recall(idxpq.search(qv, qi, sem=sem, ef=64, k=10), gt)
+        assert r_pq >= r_f32 - 0.05, (sem, r_pq, r_f32)
+
+
+def test_insert_into_pq_store(plane_index):
+    """Streaming inserts encode rows under the *frozen* codebooks — the
+    same contract as int8 scale/zero — and compact keeps them attached."""
+    idxpq = plane_index.with_dtype("pq")
+    cb0 = np.asarray(idxpq.store.plane.codebooks)
+    new_x = jnp.full((3, idxpq.store.dim), 0.33, jnp.float32)
+    new_iv = jnp.asarray([[0.2, 0.8]] * 3)
+    idx2 = idxpq.insert(new_x, new_iv)
+    assert idx2.n == idxpq.n + 3
+    assert idx2.store.plane.tag == "pq"
+    np.testing.assert_array_equal(np.asarray(idx2.store.plane.codebooks), cb0)
+    # inserted codes match a frozen-codebook re-encode of the same rows
+    slot_codes = idx2.store.plane.encode_rows(new_x)
+    hit = idx2.search(new_x[:1], jnp.asarray([[0.0, 1.0]]),
+                      sem=Semantics.IF, ef=48, k=1)
+    slot = int(hit.ids[0, 0])
+    assert slot >= 0
+    np.testing.assert_array_equal(np.asarray(idx2.store.plane.data[slot]),
+                                  np.asarray(slot_codes[0]))
+    idx3 = idx2.delete(jnp.asarray([slot])).compact()
+    assert idx3.store.plane.data.shape[0] == idx3.n
+    np.testing.assert_array_equal(np.asarray(idx3.store.plane.codebooks), cb0)
+
+
+def test_pq_roundtrips_npz_and_ckpt(plane_index, plane_queries, tmp_path):
+    from repro.ckpt import restore_index, save_index
+
+    idxpq = plane_index.with_dtype("pq")
+    idxpq.save(tmp_path / "npz")
+    back = UGIndex.load(tmp_path / "npz")
+    assert back.dtype == "pq"
+    _assert_store_bitwise(idxpq.store, back.store)
+    qv, qi = plane_queries
+    ra = idxpq.search(qv, qi, sem=Semantics.IF, ef=48, k=10)
+    rb = back.search(qv, qi, sem=Semantics.IF, ef=48, k=10)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    save_index(tmp_path / "ck", 3, idxpq)
+    back2 = restore_index(tmp_path / "ck")
+    assert back2.dtype == "pq"
+    _assert_store_bitwise(idxpq.store, back2.store)
+
+
+def test_pq_bytes_per_vector_reduction(plane_index):
+    """Codes shrink scan bytes by 4d/m (>= 8x for the default m); the
+    amortized figure includes the fixed codebook overhead."""
+    x = jax.random.normal(jax.random.key(30), (512, 24))
+    plane = VectorPlane.encode(x, "pq")
+    m = plane.codebooks.shape[0]
+    code_bytes = plane.data.shape[0] * m
+    assert (4 * 24 * 512) / code_bytes >= 8.0
+    bpv = plane.bytes_per_vector()
+    assert bpv == (code_bytes + plane.codebooks.size * 4) / 512
+
+
+# ------------------------------------------------- accounting regressions
+def test_bytes_per_vector_across_grow(plane_index):
+    """ISSUE-7 satellite: bytes/vec must amortize over *live* rows, not
+    capacity — after grow() doubles the buffers the reported figure rises
+    (fixed overhead over the same live set), it must never halve."""
+    d = plane_index.store.dim
+    before = plane_index.vector_memory_bytes()["plane_bytes_per_vector"]
+    assert before == 4 * d
+    new_x = jnp.full((3, d), 0.25, jnp.float32)
+    new_iv = jnp.asarray([[0.1, 0.9]] * 3)
+    idx2 = plane_index.insert(new_x, new_iv)     # static index: forces grow
+    assert idx2.capacity > plane_index.capacity
+    after = idx2.vector_memory_bytes()["plane_bytes_per_vector"]
+    assert after >= 4 * d                        # never below the row cost
+    want = 4 * d * idx2.capacity / idx2.n
+    assert abs(after - want) < 1e-6, (after, want)
+    # capacity-denominated (the old bug) would report exactly 4*d here
+    assert after > 4 * d * 1.5
+
+
+def test_masks_memory_bytes_accounting(plane_index):
+    """ISSUE-7 satellite: masks bytes charge 1 byte/slot per *present*
+    mask — alive-only stores must not be billed for a free mask."""
+    st = plane_index.store
+    cap = st.capacity
+    assert st.memory_bytes()["masks"] == 0            # static: no masks
+    alive = jnp.ones((cap,), bool)
+    assert st.replace(alive=alive).memory_bytes()["masks"] == cap
+    both = st.replace(alive=alive, free=jnp.zeros((cap,), bool))
+    assert both.memory_bytes()["masks"] == 2 * cap
+    assert st.live_count() == cap
+    assert both.replace(alive=alive.at[0].set(False)).live_count() == cap - 1
